@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark suite.
+
+Every bench prints ``name,us_per_call,derived`` CSV rows (harness contract).
+All cache benches run against the scaled simulated host (256-set L2 /
+512-set x 2-slice LLC — structurally faithful to Table 1, sized for a
+single CPU core; the scaling is recorded in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.core.cachesim import CacheGeometry, MachineGeometry
+from repro.core.host_model import GuestVM, SimHost
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@contextmanager
+def timer():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["s"] = time.perf_counter() - t0
+    t["us"] = t["s"] * 1e6
+
+
+def bench_vm(n_domains=1, cores_per_domain=2, mapping="fragmented", seed=0,
+             n_guest_pages=1 << 13, replacement="lru"):
+    geom = MachineGeometry(
+        n_domains=n_domains, cores_per_domain=cores_per_domain,
+        l2=CacheGeometry(n_sets=256, n_ways=8),
+        llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=2),
+        replacement=replacement)
+    host = SimHost(geom, n_host_pages=1 << 14, seed=seed)
+    vm = GuestVM(host, n_guest_pages=n_guest_pages, mapping=mapping,
+                 vcpu_cores=list(range(geom.n_cores)), seed=seed)
+    return host, vm

@@ -1,0 +1,54 @@
+"""Benchmark harness: one section per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig10,roofline
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated name filters (substring match)")
+    args = ap.parse_args()
+    filters = [f for f in args.only.split(",") if f]
+
+    from benchmarks import bench_paper_tables, bench_system
+
+    sections = [
+        ("table2", bench_paper_tables.bench_table2_eviction_construction),
+        ("table3", bench_paper_tables.bench_table3_associativity),
+        ("table4", bench_paper_tables.bench_table4_color_lists),
+        ("table5", bench_paper_tables.bench_table5_coverage),
+        ("table6", bench_paper_tables.bench_table6_prime_probe),
+        ("fig7b", bench_paper_tables.bench_fig7b_window_sensitivity),
+        ("fig10", bench_paper_tables.bench_fig10_cas),
+        ("fig11", bench_paper_tables.bench_fig11_cap),
+        ("fig12", bench_paper_tables.bench_fig12_overhead),
+        ("kernels", bench_system.bench_kernels),
+        ("train", bench_system.bench_train_step),
+        ("serve", bench_system.bench_serve_step),
+        ("roofline", bench_system.bench_roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in sections:
+        if filters and not any(f in name for f in filters):
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; failures are rows
+            print(f"{name}.ERROR,0.0,{type(e).__name__}: {e}",
+                  file=sys.stdout, flush=True)
+    print(f"# total_wall_s,{time.time()-t0:.1f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

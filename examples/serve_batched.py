@@ -1,0 +1,57 @@
+"""Batched serving demo: CAS-routed replicas + wave-batched greedy decode.
+
+Two model "replicas" (as on two pods); the CacheX-TPU monitor reports one
+replica contended, so the router steers new requests to the quiet one.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced_config
+from repro.core.cas import TierTracker
+from repro.models import lm
+from repro.serve.engine import ReplicaRouter, Request, ServeEngine
+
+
+def main():
+    cfg = reduced_config(get_config("qwen1p5_0p5b"))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engines = [ServeEngine(cfg, params, batch_slots=4, max_len=64)
+               for _ in range(2)]
+
+    # monitor says replica 0 is contended (3 consecutive intervals)
+    tiers = TierTracker(keys=[0, 1], thresholds=[1.2])
+    for _ in range(3):
+        tiers.update({0: 5.0, 1: 0.3})
+    router = ReplicaRouter(2, tiers=tiers)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    routed = {0: 0, 1: 0}
+    for rid in range(8):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 8))
+        r = router.route()
+        routed[r] += 1
+        engines[r].submit(Request(rid=rid, prompt=prompt.astype(np.int32),
+                                  max_new=8, replica=r))
+    print(f"routing under contention on replica 0: {routed} "
+          "(CAS prefers the quiet replica)")
+
+    done = []
+    for eng in engines:
+        done.extend(eng.run_until_drained())
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s on 1 CPU core)")
+    for r in sorted(done, key=lambda r: r.rid)[:3]:
+        print(f"  req {r.rid} (replica {r.replica}): "
+              f"prompt {r.prompt.tolist()} -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

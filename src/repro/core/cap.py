@@ -1,0 +1,128 @@
+"""CAP — virtual-color-aware page-cache management (paper §4.2).
+
+SRM-Buffer-style page-cache coloring driven by CacheX's virtual colors and
+VSCAN's per-color contention:
+
+  * page-cache allocations are served from VCOL's colored free-page lists,
+    one color at a time (proceeding to the next color when the current one
+    is exhausted, instead of constraining allocatable memory to one fixed
+    color — the paper's refinement of SRM-Buffer),
+  * colors are *ranked hottest-first* by per-color eviction rate, steering
+    low-temporal-locality page-cache traffic into the LLC zones already
+    being thrashed by co-located VMs, so it absorbs inter-VM interference
+    that would otherwise evict high-locality workload data,
+  * allocated pages are pinned ("non-movable") so their color stays valid,
+  * adaptive recoloring: when the previously-hottest color has been
+    out-ranked by a new hottest color for **three consecutive monitoring
+    intervals**, all file-backed page-cache pages are reclaimed so that
+    subsequent allocations land in the now-hotter zone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cas import HYSTERESIS_INTERVALS
+
+
+@dataclasses.dataclass
+class CapStats:
+    allocated: int = 0
+    color_rollovers: int = 0
+    recolor_events: int = 0
+    fallback_allocs: int = 0
+
+
+class CapAllocator:
+    """Page-cache page allocator over colored free lists."""
+
+    def __init__(self, free_lists: Dict[int, List[int]],
+                 hysteresis: int = HYSTERESIS_INTERVALS,
+                 use_contention: bool = True):
+        # pop() from the end is cheapest; keep lists as stacks
+        self.free_lists = {c: list(p) for c, p in free_lists.items()}
+        self.use_contention = use_contention
+        self.hysteresis = hysteresis
+        self.ranking: List[int] = sorted(self.free_lists)     # hottest first
+        self._cursor = 0
+        self.committed_hottest: Optional[int] = self.ranking[0] if self.ranking else None
+        self._challenger: Optional[int] = None
+        self._challenger_count = 0
+        self.allocated_pages: List[int] = []   # file-backed, non-movable
+        self.page_color: Dict[int, int] = {}
+        self.stats = CapStats()
+
+    # -- contention feed (per monitoring interval) ------------------------------
+    def update_contention(self, per_color_rate: Dict[int, float]) -> bool:
+        """Re-rank colors hottest-first; trigger recoloring per the paper's
+        3-interval rule.  Returns True if a recolor event fired."""
+        if not self.use_contention or not per_color_rate:
+            return False
+        self.ranking = sorted(per_color_rate, key=per_color_rate.get,
+                              reverse=True)
+        hottest = self.ranking[0]
+        if hottest == self.committed_hottest:
+            self._challenger, self._challenger_count = None, 0
+            return False
+        if hottest == self._challenger:
+            self._challenger_count += 1
+        else:
+            self._challenger, self._challenger_count = hottest, 1
+        if self._challenger_count >= self.hysteresis:
+            self.committed_hottest = hottest
+            self._challenger, self._challenger_count = None, 0
+            self._cursor = 0
+            return True
+        return False
+
+    # -- allocation --------------------------------------------------------------
+    def _order(self) -> List[int]:
+        if not self.use_contention:
+            return sorted(self.free_lists)
+        # committed hottest first, then current ranking order
+        order = [c for c in self.ranking if c in self.free_lists]
+        if self.committed_hottest in order:
+            order.remove(self.committed_hottest)
+            order.insert(0, self.committed_hottest)
+        return order
+
+    def allocate(self) -> Optional[int]:
+        """Allocate one page-cache page (kernel page-cache miss path)."""
+        order = self._order()
+        n = len(order)
+        for step in range(n):
+            color = order[(self._cursor + step) % n]
+            lst = self.free_lists.get(color, [])
+            if lst:
+                if step > 0:
+                    self._cursor = (self._cursor + step) % n
+                    self.stats.color_rollovers += 1
+                page = lst.pop()
+                self.allocated_pages.append(page)
+                self.page_color[page] = color
+                self.stats.allocated += 1
+                return page
+        self.stats.fallback_allocs += 1
+        return None  # caller falls back to the default allocator
+
+    # -- reclaim (recolor event / memory pressure) ---------------------------------
+    def reclaim_all(self) -> List[int]:
+        """Drop all file-backed page-cache pages back into their colored
+        lists (the paper's recoloring mechanism: subsequent buffered-file
+        allocations repopulate from the new hottest color)."""
+        self.stats.recolor_events += 1
+        for p in self.allocated_pages:
+            self.free_lists.setdefault(self.page_color[p], []).append(p)
+        dropped = self.allocated_pages
+        self.allocated_pages = []
+        return dropped
+
+    def step_interval(self, per_color_rate: Dict[int, float]) -> bool:
+        """One monitoring interval: update ranks; reclaim on recolor."""
+        if self.update_contention(per_color_rate):
+            self.reclaim_all()
+            return True
+        return False

@@ -1,0 +1,320 @@
+"""Simulated virtualized host: GPA->HPA translation, co-tenants, timers.
+
+This module is the boundary between "what the VM can see" and "host ground
+truth".  The probing code in `eviction.py` / `color.py` / `vscan.py` only
+ever talks to :class:`GuestVM` — guest-visible addresses, timed accesses,
+and simulated wall-clock waits.  Host internals (the page table, the slice
+hash, cache-resident ground truth) are reachable only through the
+``hypercall_*`` methods, mirroring the custom hypercall the paper adds for
+*validation only* (§6.2: "Accuracy is verified via the custom hypercall
+exposing GPA-to-HPA mappings").
+
+Timing model.  The guest reads a TSC whose first readings after an idle
+period carry large spikes — the guest-TSC instability the paper reports in
+§3.1 ("latency spikes even when the target resides in L1/L2 caches ...
+caused by unstable guest TSC readings via RDTSC").  `GuestVM.warm_timer()`
+performs dummy timer reads, reproducing the paper's mitigation.
+
+Simulated time.  `wait_ms()` advances a virtual clock; registered co-tenant
+workloads emit `rate_per_ms` LLC accesses per waited millisecond, which is
+how a Prime+Probe wait window observes contention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cachesim
+from repro.core.cachesim import (BLOCKS_PER_PAGE, LAT_DRAM, MachineGeometry,
+                                 PAGE_BITS)
+
+_STREAM_BUCKET = 512  # pad access streams to multiples of this (compile reuse)
+
+
+def _pad_to_bucket(arr: np.ndarray, fill) -> np.ndarray:
+    n = len(arr)
+    m = ((n + _STREAM_BUCKET - 1) // _STREAM_BUCKET) * _STREAM_BUCKET
+    if m == 0:
+        m = _STREAM_BUCKET
+    out = np.full(m, fill, dtype=np.int32)
+    out[:n] = arr
+    return out
+
+
+@dataclasses.dataclass
+class CotenantWorkload:
+    """A co-located VM generating LLC traffic at `rate_per_ms` accesses/ms."""
+
+    name: str
+    domain: int
+    rate_per_ms: float
+    gen: Callable[[np.random.Generator, int], np.ndarray]  # -> block addrs
+    enabled: bool = True
+
+
+class SimHost:
+    """The hypervisor + physical machine."""
+
+    def __init__(self,
+                 geom: Optional[MachineGeometry] = None,
+                 n_host_pages: int = 1 << 15,
+                 seed: int = 0):
+        self.geom = geom or MachineGeometry()
+        self.n_host_pages = n_host_pages
+        self.rng = np.random.default_rng(seed)
+        self.state = cachesim.init_machine(self.geom)
+        self.free_host_pages: List[int] = list(range(n_host_pages))
+        self.cotenants: List[CotenantWorkload] = []
+        self.time_ms: float = 0.0
+        # contiguity: freshly-booted VMs get mostly-contiguous host pages
+        self._next_contig = 0
+
+    # -- memory provisioning ------------------------------------------------
+    def provision_pages(self, n: int, mode: str = "contiguous") -> np.ndarray:
+        """Back `n` guest pages with host pages.
+
+        mode='contiguous': consecutive host pages (fresh boot, §2.2);
+        mode='fragmented': uniformly random free host pages (aged host).
+        """
+        if mode == "contiguous":
+            start = self._next_contig
+            pages = np.arange(start, start + n, dtype=np.int64)
+            self._next_contig += n
+            if self._next_contig > self.n_host_pages:
+                raise RuntimeError("host out of contiguous memory")
+        elif mode == "fragmented":
+            idx = self.rng.choice(len(self.free_host_pages), size=n, replace=False)
+            pages = np.array([self.free_host_pages[i] for i in idx], dtype=np.int64)
+        else:
+            raise ValueError(mode)
+        return pages
+
+    def remap_pages(self, page_table: np.ndarray, fraction: float,
+                    rng: Optional[np.random.Generator] = None) -> np.ndarray:
+        """Hypervisor-side remapping (compaction/ballooning, §2.1/Fig 9):
+        silently rebacks a random `fraction` of guest pages with new host
+        pages.  Cached lines of remapped pages are *not* migrated (their old
+        HPAs simply stop being accessed)."""
+        rng = rng or self.rng
+        pt = page_table.copy()
+        n = len(pt)
+        k = int(n * fraction)
+        if k == 0:
+            return pt
+        victims = rng.choice(n, size=k, replace=False)
+        pt[victims] = rng.integers(0, self.n_host_pages, size=k)
+        return pt
+
+    # -- co-tenants ----------------------------------------------------------
+    def add_cotenant(self, wl: CotenantWorkload) -> None:
+        self.cotenants.append(wl)
+
+    def _cotenant_stream(self, ms: float) -> Tuple[np.ndarray, np.ndarray]:
+        blocks: List[np.ndarray] = []
+        cores: List[np.ndarray] = []
+        for wl in self.cotenants:
+            if not wl.enabled:
+                continue
+            n = int(wl.rate_per_ms * ms)
+            if n <= 0:
+                continue
+            b = wl.gen(self.rng, n).astype(np.int32)
+            blocks.append(b)
+            # route the workload's LLC traffic into ITS domain
+            core = wl.domain * self.geom.cores_per_domain
+            cores.append(np.full(n, core, np.int32))
+        if not blocks:
+            return np.empty(0, np.int32), np.empty(0, np.int32)
+        # interleave round-robin-ish by shuffling a concatenation
+        allb = np.concatenate(blocks)
+        allc = np.concatenate(cores)
+        perm = self.rng.permutation(len(allb))
+        return allb[perm], allc[perm]
+
+    def run_cotenants(self, ms: float) -> None:
+        blocks, cores = self._cotenant_stream(ms)
+        if len(blocks) == 0:
+            return
+        self._run_stream(blocks, cores=cores,
+                         cotenant=np.ones(len(blocks), bool))
+
+    # -- raw stream execution -------------------------------------------------
+    def _run_stream(self, blocks: np.ndarray, cores: np.ndarray,
+                    cotenant: np.ndarray) -> np.ndarray:
+        n = len(blocks)
+        pb = _pad_to_bucket(blocks.astype(np.int32), -1)
+        pc = _pad_to_bucket(cores.astype(np.int32), 0)
+        pt = np.zeros(len(pb), bool)
+        pt[:n] = cotenant
+        self.state, lats = cachesim.access_stream(
+            self.state, self.geom, jnp.asarray(pb), jnp.asarray(pc),
+            jnp.asarray(pt))
+        return np.asarray(lats)[:n]
+
+
+class GuestVM:
+    """The VM-visible interface.  Everything the probing stack may use."""
+
+    def __init__(self, host: SimHost, n_guest_pages: int = 1 << 13,
+                 mapping: str = "contiguous", vcpu_cores: Sequence[int] = (0,),
+                 seed: int = 0):
+        self.host = host
+        self.n_guest_pages = n_guest_pages
+        # hidden from the guest:
+        self._page_table = host.provision_pages(n_guest_pages, mapping)
+        self.vcpu_cores = list(vcpu_cores)  # vcpu i -> host core (hidden!)
+        self.n_vcpus = len(self.vcpu_cores)
+        self.rng = np.random.default_rng(seed + 17)
+        self._free_guest_pages = list(range(n_guest_pages))
+        # guest-TSC noise model: reads are noisy until warmed
+        self._timer_warm = 0
+        self.timer_noise_lat = 400
+        self.timer_warm_reads = 8
+        # cost accounting (used by benchmarks to report hardware-independent
+        # work: total simulated accesses and batched passes issued)
+        self.stat_accesses = 0
+        self.stat_passes = 0
+
+    # -- guest memory management ----------------------------------------------
+    def alloc_pages(self, n: int) -> np.ndarray:
+        if n > len(self._free_guest_pages):
+            raise RuntimeError("guest out of pages")
+        idx = self.rng.choice(len(self._free_guest_pages), size=n, replace=False)
+        idx = np.sort(idx)[::-1]
+        pages = np.array([self._free_guest_pages[i] for i in idx], np.int64)
+        for i in idx:
+            self._free_guest_pages.pop(int(i))
+        return pages
+
+    def free_pages(self, pages: Sequence[int]) -> None:
+        self._free_guest_pages.extend(int(p) for p in pages)
+
+    @staticmethod
+    def gva(page: int, offset: int) -> int:
+        """Guest virtual address of byte `offset` in guest page `page`.
+        (Guest identity-maps GVA->GPA for the probing buffers.)"""
+        return (int(page) << PAGE_BITS) | int(offset)
+
+    # -- translation (hidden) ---------------------------------------------------
+    def _hpa_block(self, gvas: np.ndarray) -> np.ndarray:
+        gvas = np.asarray(gvas, np.int64)
+        gpage = gvas >> PAGE_BITS
+        off = gvas & ((1 << PAGE_BITS) - 1)
+        hpage = self._page_table[gpage]
+        return ((hpage << PAGE_BITS | off) >> cachesim.LINE_BITS).astype(np.int32)
+
+    # -- accesses ---------------------------------------------------------------
+    def access(self, gvas: np.ndarray, vcpu: int = 0) -> None:
+        """Untimed accesses (MLP-style batched traversal)."""
+        gvas = np.atleast_1d(np.asarray(gvas, np.int64))
+        blocks = self._hpa_block(gvas)
+        core = self.vcpu_cores[vcpu]
+        self.stat_accesses += len(blocks)
+        self.stat_passes += 1
+        self.host._run_stream(blocks, np.full(len(blocks), core, np.int32),
+                              np.zeros(len(blocks), bool))
+
+    def timed_access(self, gvas: np.ndarray, vcpu: int = 0) -> np.ndarray:
+        """Accesses with per-access guest-TSC latencies (noisy when cold)."""
+        gvas = np.atleast_1d(np.asarray(gvas, np.int64))
+        blocks = self._hpa_block(gvas)
+        core = self.vcpu_cores[vcpu]
+        self.stat_accesses += len(blocks)
+        self.stat_passes += 1
+        lats = self.host._run_stream(
+            blocks, np.full(len(blocks), core, np.int32),
+            np.zeros(len(blocks), bool)).astype(np.int64)
+        # Guest TSC instability (§3.1): readings spike until the timer has
+        # been read a few times in quick succession; any idle period
+        # (wait_ms) makes it cold again.  warm_timer() = dummy reads.
+        for i in range(len(lats)):
+            if self._timer_warm < self.timer_warm_reads and self.rng.random() < 0.35:
+                lats[i] += self.timer_noise_lat
+            self._timer_warm = min(self.timer_warm_reads, self._timer_warm + 1)
+        return lats
+
+    def warm_timer(self) -> None:
+        """Dummy RDTSC reads before a measurement (the paper's §3.1 fix)."""
+        self._timer_warm = self.timer_warm_reads
+
+    def _timer_cooldown(self) -> None:
+        self._timer_warm = 0
+
+    # -- time -----------------------------------------------------------------
+    def wait_ms(self, ms: float) -> None:
+        """Spin-wait: co-located VMs keep running; our timer goes cold."""
+        self.host.time_ms += ms
+        self.host.run_cotenants(ms)
+        self._timer_cooldown()
+
+    # -- validation hypercalls (used ONLY by tests/benchmarks) -------------------
+    def hypercall_hpa_page(self, gpage: int) -> int:
+        return int(self._page_table[gpage])
+
+    def hypercall_l2_color(self, gpage: int) -> int:
+        # L2 color = HPA bits 15-12 (paper Fig 1) = low 4 bits of host page no.
+        return int(self._page_table[gpage]) & 0xF
+
+    def hypercall_llc_color(self, gpage: int) -> int:
+        # LLC color = HPA bits 16-12 = low 5 bits of host page number.
+        return int(self._page_table[gpage]) & 0x1F
+
+    def hypercall_llc_setslice(self, gva: int) -> Tuple[int, int]:
+        blk = int(self._hpa_block(np.array([gva]))[0])
+        s = int(np.asarray(cachesim.slice_hash(
+            jnp.asarray([blk]), self.host.geom.llc.n_slices,
+            self.host.geom.slice_seed))[0])
+        return blk % self.host.geom.llc.n_sets, s
+
+    def hypercall_resident_level(self, gva: int, vcpu: int = 0) -> int:
+        blk = int(self._hpa_block(np.array([gva]))[0])
+        return cachesim.resident_level(self.host.state, blk,
+                                       self.vcpu_cores[vcpu], self.host.geom)
+
+
+# -- canned co-tenant generators (paper §6 workload analogues) -----------------
+
+def polluter_gen(region_pages: int = 4096, base_page: int = 1 << 18):
+    """`cache polluter`: 64 B-stride sweeps of a large region (stresses all
+    sets)."""
+    state = {"pos": 0}
+    n_blocks = region_pages * BLOCKS_PER_PAGE
+
+    def gen(rng: np.random.Generator, n: int) -> np.ndarray:
+        start = state["pos"]
+        out = (base_page * BLOCKS_PER_PAGE +
+               (start + np.arange(n)) % n_blocks)
+        state["pos"] = (start + n) % n_blocks
+        return out
+    return gen
+
+
+def poisoner_gen(host: SimHost, target_set_index_bits: int, n_sets: int,
+                 base_page: int = 1 << 18, pool_pages: int = 8192):
+    """`cache poisoner`: stresses only blocks whose LLC set index falls in one
+    of 16 zones (1/16 of the sets), like §2.2's avoidable-set-contention
+    experiment.  zone = target_set_index_bits (0..15)."""
+    lo = target_set_index_bits * (n_sets // 16)
+    hi = lo + (n_sets // 16)
+    base_block = base_page * BLOCKS_PER_PAGE
+    cand = base_block + np.arange(pool_pages * BLOCKS_PER_PAGE)
+    cand = cand[(cand % n_sets >= lo) & (cand % n_sets < hi)]
+
+    def gen(rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.choice(cand, size=n, replace=True)
+    return gen
+
+
+def zipf_gen(base_page: int = 1 << 18, region_pages: int = 2048, a: float = 1.3):
+    """nginx-like skewed accesses (some sets naturally hotter, Fig 4-left)."""
+    base_block = base_page * BLOCKS_PER_PAGE
+    n_blocks = region_pages * BLOCKS_PER_PAGE
+
+    def gen(rng: np.random.Generator, n: int) -> np.ndarray:
+        r = rng.zipf(a, size=n) % n_blocks
+        return base_block + r
+    return gen

@@ -1,0 +1,46 @@
+"""Elastic scaling: restore checkpointed state onto a different mesh.
+
+Because checkpoints are mesh-agnostic (full logical arrays, see
+checkpoint/ckpt.py) and shardings are derived from parameter *paths*,
+scaling from N to M chips is: build the target mesh, derive target
+shardings, `restore(...)` against them.  A failed-pod restart is the same
+operation with the surviving single-pod mesh.
+
+`replan_batch` keeps the global batch size constant across mesh changes by
+re-splitting microbatches (gradient-accumulation count absorbs the change
+in data-parallel ways), so training curves are unaffected by elasticity.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ArchConfig
+from repro.train import train_step as ts
+
+
+def replan_batch(global_batch: int, old_dp: int, new_dp: int,
+                 old_microbatches: int) -> int:
+    """New grad-accum count that keeps global batch identical."""
+    per_step = global_batch // old_dp // old_microbatches  # per-device mb
+    assert per_step >= 1
+    new_mb = max(1, global_batch // new_dp // per_step)
+    # exactness check: global must factor
+    while new_dp * new_mb * per_step != global_batch and new_mb > 1:
+        new_mb -= 1
+    if new_dp * new_mb * per_step != global_batch:
+        raise ValueError(
+            f"global_batch={global_batch} does not factor over dp={new_dp}")
+    return new_mb
+
+
+def restore_on_mesh(ckpt_dir: str, step: int, cfg: ArchConfig,
+                    hyper: ts.TrainHyper, mesh: Mesh) -> ts.TrainState:
+    """Cross-mesh (elastic) restore of a TrainState checkpoint."""
+    astate = ts.abstract_train_state(cfg, hyper)
+    shard = ts.state_shardings(cfg, mesh, astate)
+    return ckpt.restore(ckpt_dir, step, astate, shard)

@@ -1,0 +1,204 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / pod).
+
+Models are pure functions over parameter pytrees; sharding is applied at the
+jit boundary by mapping each parameter's *path* to a logical-axis signature
+and each logical axis to a mesh axis.  Activations get
+``with_sharding_constraint`` hints through :func:`shard_hint`, which is a
+no-op outside a `use_mesh_rules` context (so model code stays runnable on a
+single device, e.g. in smoke tests).
+
+Mesh axes (see launch/mesh.py):
+  * ``pod``   — pure data parallelism across pods (plus gradient all-reduce,
+                optionally int8-compressed, see optim/grad_compress.py)
+  * ``data``  — batch data parallelism + FSDP (ZeRO-3-style parameter /
+                optimizer-state sharding along the embed axis; GSPMD inserts
+                the per-layer all-gathers under the scan, which overlaps them
+                with layer compute)
+  * ``model`` — tensor parallelism over heads / d_ff / vocab / experts (EP)
+
+Logical axes:
+  batch, seq, embed, heads, kv_heads, qkv, mlp, vocab, expert, layers,
+  conv, state, null
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (None = replicated)
+DEFAULT_RULES: Dict[str, Optional[object]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_act": None,        # Megatron-SP: set to "model" to seq-shard
+                            # residuals between TP regions
+    "embed": "data",        # FSDP: shard params' embed axis over data
+    "embed_act": None,      # activations' embed axis stays unsharded
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "kv_qkv": "model",      # per-arch: None when kv_heads < TP (replicated)
+    "mlp": "model",
+    "mlp_ep": None,         # expert-internal FFN dim (EP already uses model)
+    "vocab": "model",
+    "expert": "model",      # EP
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "cache_seq": None,
+    "null": None,
+}
+
+_ctx = threading.local()
+
+
+def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def resolve(rules: Dict[str, object], mesh: Mesh, *logical) -> P:
+    """Logical axes -> PartitionSpec, dropping mesh axes absent from the
+    mesh (e.g. 'pod' on the single-pod mesh)."""
+    names = set(_mesh_axes(mesh))
+    out = []
+    for ax in logical:
+        m = rules.get(ax, None)
+        if m is None:
+            out.append(None)
+        elif isinstance(m, tuple):
+            kept = tuple(x for x in m if x in names)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            out.append(m if m in names else None)
+    return P(*out)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: Optional[Dict[str, object]] = None):
+    """Enable shard_hint() inside model code."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def shard_hint(x, *logical):
+    """Annotate an activation with logical axes (no-op without context)."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = resolve(rules, mesh, *logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter-path -> logical axes.  Paths are '/'-joined pytree key paths.
+# First matching regex wins.  Signatures must cover the array's full rank
+# (scan-stacked params have a leading 'layers' axis).
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    # embeddings / heads
+    (r"embed/tokens$", ("vocab", "embed")),
+    (r"embed/proj$", ("null", "embed")),
+    (r"head/unembed$", ("embed", "vocab")),
+    (r"final_norm", ("null",)),
+    # attention (stacked: leading layers axis)
+    (r"attn/wq$", ("layers", "embed", "qkv")),
+    (r"attn/wk$", ("layers", "embed", "kv_qkv")),
+    (r"attn/wv$", ("layers", "embed", "kv_qkv")),
+    (r"attn/bq$", ("layers", "qkv")),
+    (r"attn/bk$", ("layers", "kv_qkv")),
+    (r"attn/bv$", ("layers", "kv_qkv")),
+    (r"attn/wo$", ("layers", "qkv", "embed")),
+    # dense mlp
+    (r"mlp/w_gate$", ("layers", "embed", "mlp")),
+    (r"mlp/w_up$", ("layers", "embed", "mlp")),
+    (r"mlp/w_down$", ("layers", "mlp", "embed")),
+    # MoE — experts sharded over "model" (EP); inside an expert the FFN dims
+    # are NOT tensor-parallel (a mesh axis may appear only once per spec)
+    (r"moe/router$", ("layers", "embed", "expert")),
+    (r"moe/w_gate$", ("layers", "expert", "embed", "mlp_ep")),
+    (r"moe/w_up$", ("layers", "expert", "embed", "mlp_ep")),
+    (r"moe/w_down$", ("layers", "expert", "mlp_ep", "embed")),
+    (r"moe/shared_gate$", ("layers", "embed", "null")),
+    (r"moe/shared/w_(gate|up)$", ("layers", "embed", "mlp")),
+    (r"moe/shared/w_down$", ("layers", "mlp", "embed")),
+    # mamba2 / ssd
+    (r"ssm/in_proj$", ("layers", "embed", "mlp")),
+    (r"ssm/conv_w$", ("layers", "conv", "mlp")),
+    (r"ssm/conv_b$", ("layers", "mlp")),
+    (r"ssm/dt_bias$", ("layers", "heads")),
+    (r"ssm/A_log$", ("layers", "heads")),
+    (r"ssm/D$", ("layers", "heads")),
+    (r"ssm/out_proj$", ("layers", "mlp", "embed")),
+    (r"ssm/norm_w$", ("layers", "mlp")),
+    # shared (hybrid zamba) blocks: no leading layers axis
+    (r"shared.*/attn/wq$", ("embed", "qkv")),
+    (r"shared.*/attn/w[kv]$", ("embed", "kv_qkv")),
+    (r"shared.*/attn/bq$", ("qkv",)),
+    (r"shared.*/attn/b[kv]$", ("kv_qkv",)),
+    (r"shared.*/attn/wo$", ("qkv", "embed")),
+    (r"shared.*/mlp/w_(gate|up)$", ("embed", "mlp")),
+    (r"shared.*/mlp/w_down$", ("mlp", "embed")),
+    (r"shared.*/norm", ("null",)),
+    # norms inside stacked layers
+    (r"norm", ("layers", "null")),
+)
+
+
+def path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[str, ...]:
+    for pat, sig in PARAM_RULES:
+        if re.search(pat, path):
+            if len(sig) == ndim:
+                return sig
+            # tolerate missing/extra leading 'layers' axis (shared blocks /
+            # non-stacked single layers)
+            if len(sig) == ndim + 1 and sig[0] == "layers":
+                return sig[1:]
+            if len(sig) + 1 == ndim:
+                return ("layers",) + sig
+    return ("null",) * ndim  # replicate by default
+
+
+def param_sharding(params, mesh: Mesh,
+                   rules: Optional[Dict[str, object]] = None):
+    """NamedSharding pytree for a parameter pytree."""
+    rules = rules or DEFAULT_RULES
+
+    def one(path, x):
+        sig = logical_axes_for(path_str(path), x.ndim)
+        return NamedSharding(mesh, resolve(rules, mesh, *sig))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_spec(params, mesh: Mesh, rules=None):
+    rules = rules or DEFAULT_RULES
+
+    def one(path, x):
+        sig = logical_axes_for(path_str(path), x.ndim)
+        return resolve(rules, mesh, *sig)
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: HBM streaming probe (CacheX's Prime phase on TPU).
+
+The TPU adaptation of the paper's eviction-set probe: instead of timing
+conflict evictions (no hardware sets on TPU), the monitor times a
+STREAM-triad over a buffer sized to blow through VMEM, so wall time is a
+direct measure of *effective* HBM bandwidth — the contended, opaque
+resource.  The windowed prime/wait/probe structure, EWMA smoothing and
+tier logic around this kernel live in `repro.tpuprobe.monitor`.
+
+Tiles are (block, 128) in VMEM — 128-lane aligned; `block` rows of 8-row
+sublanes.  Three streams (2 reads + 1 write) make bytes/elem exact:
+12 bytes/f32 element.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _triad_kernel(a_ref, b_ref, s_ref, o_ref):
+    o_ref[...] = a_ref[...] * s_ref[0] + b_ref[...]
+
+
+def triad(a, b, scale, *, block: int = 512, interpret: bool = False):
+    """a, b: (N, 128) f32; scale: (1,) f32 (SMEM) -> (N, 128)."""
+    N = a.shape[0]
+    block = min(block, N)
+    assert N % block == 0
+    return pl.pallas_call(
+        functools.partial(_triad_kernel),
+        grid=(N // block,),
+        in_specs=[
+            pl.BlockSpec((block, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block, 128), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(a, b, scale)

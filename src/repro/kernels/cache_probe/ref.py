@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the HBM streaming-probe kernel: STREAM-triad."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def triad_ref(a, b, scale):
+    """out = a * scale + b; the canonical bandwidth-bound op (3 streams)."""
+    return a * scale + b

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle: per-set LRU simulation of pre-partitioned streams.
+
+Cache sets are mutually independent under LRU, so a batch of per-set
+access substreams (padded with -1) can be simulated as a vmapped scan —
+this is the reference the Pallas kernel is swept against, and the
+correctness anchor tying the parallel fast path back to the sequential
+`core.cachesim` simulator (see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_sets_ref(tags, age, streams, clock0: int = 1):
+    """tags/age: (rows, ways) int32; streams: (rows, T) int32, -1 padded.
+    Returns (tags, age, hits (rows, T) bool)."""
+
+    def per_row(tag_row, age_row, stream):
+        def step(carry, item):
+            t, a, clk = carry
+            blk = item
+            valid = blk >= 0
+            hit_mask = t == blk
+            hit = jnp.any(hit_mask) & valid
+            empty = t == -1
+            has_empty = jnp.any(empty)
+            lru = jnp.argmin(jnp.where(empty, jnp.iinfo(jnp.int32).max, a))
+            victim_way = jnp.where(has_empty, jnp.argmax(empty), lru)
+            way = jnp.where(hit, jnp.argmax(hit_mask), victim_way)
+            nt = jnp.where(valid, t.at[way].set(blk), t)
+            na = jnp.where(valid, a.at[way].set(clk), a)
+            return (nt, na, clk + 1), hit
+
+        (t, a, _), hits = jax.lax.scan(step, (tag_row, age_row,
+                                              jnp.int32(clock0)), stream)
+        return t, a, hits
+
+    return jax.vmap(per_row)(tags, age, streams)

@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel: re-exports the model's
+reference implementation (single source of truth for SSD semantics)."""
+
+from repro.models.mamba2 import ssd_chunked_ref  # noqa: F401

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first use.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagation succeeds, no unsupported collectives, memory fits) and records
+the roofline inputs:
+
+    python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both \
+        --out benchmarks/results/dryrun
+
+Skips (recorded, per the assignment):
+  * long_500k for pure full-attention archs (needs sub-quadratic attention),
+  * decode shapes for encoder-only archs.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ALIASES, ARCH_IDS, SHAPE_BY_NAME, SHAPES,
+                                ArchConfig, ShapeSpec, get_config,
+                                input_specs)
+from repro.launch import roofline as rl
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.train import train_step as ts
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "long_500k needs sub-quadratic attention (pure-attention arch)"
+    return None
+
+
+def default_microbatches(cfg: ArchConfig, shape: ShapeSpec,
+                         multi_pod: bool = False) -> int:
+    if shape.kind != "train":
+        return 1
+    # per-DEVICE microbatch must stay >= 1: nm <= global_batch / dp_ways
+    dp = 32 if multi_pod else 16
+    cap = max(1, shape.global_batch // dp)
+    # keep per-device microbatch activation footprint moderate; the GShard
+    # dispatch tensor (B,S,E,C) makes MoE activations ~4x heavier
+    want = 16 if cfg.family == "moe" else \
+        (8 if shape.global_batch * shape.seq_len >= 2 ** 20 else 4)
+    return min(want, cap)
+
+
+def compile_cell(cfg: ArchConfig, shape: ShapeSpec, multi_pod: bool,
+                 hyper: Optional[ts.TrainHyper] = None) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            hyper = hyper or ts.TrainHyper(
+                microbatches=default_microbatches(cfg, shape, multi_pod),
+                compress_cross_pod=multi_pod)
+            jitted, astate, st_shard, bshard = ts.jit_train_step(
+                cfg, mesh, hyper, shape)
+            abatch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                      for k, v in input_specs(cfg, shape).items()}
+            lowered = jitted.lower(astate, abatch)
+        elif shape.kind == "prefill":
+            jitted, aparams, _ = ts.jit_prefill(cfg, mesh, shape)
+            abatch = input_specs(cfg, shape)
+            lowered = jitted.lower(aparams, abatch)
+        else:  # decode
+            jitted, aparams, acaches, _ = ts.jit_decode_step(
+                cfg, mesh, shape)
+            spec = input_specs(cfg, shape)
+            lowered = jitted.lower(aparams, acaches, spec["tokens"],
+                                   jnp.int32(0))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+    nm = hyper.microbatches if (shape.kind == "train" and hyper) else 1
+    ana = rl.analytic_costs(cfg, shape, n_chips, microbatches=nm,
+                            remat=(hyper.remat if shape.kind == "train"
+                                   and hyper else "none"))
+    # roofline term uses the TPU-corrected bytes (see CollectiveStats);
+    # raw parsed bytes are recorded alongside
+    coll_dev = coll.tpu_corrected_bytes
+    terms = rl.roofline_terms(ana.flops_per_device,
+                              ana.hbm_bytes_per_device, coll_dev,
+                              model_flops_dev=ana.model_flops_global / n_chips)
+
+    mem_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes +
+               ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    hlo_flops_dev = ana.flops_per_device
+    # analytic_costs already applies the x3 train multiplier to MODEL_FLOPS
+    mf_dev = ana.model_flops_global / n_chips
+    return {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "per_device_bytes": int(mem_dev),
+            "fits_hbm": bool(mem_dev < HBM_BYTES),
+        },
+        "cost_analysis_raw": {
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+            "note": "per-device; while bodies counted once (see DESIGN.md)",
+        },
+        "collectives": {
+            "total_bytes_per_device": int(coll.total_bytes),
+            "tpu_corrected_bytes_per_device": int(coll.tpu_corrected_bytes),
+            "by_kind": {k: int(v) for k, v in coll.by_kind.items() if v},
+            "by_group_size": {str(k): int(v)
+                              for k, v in coll.by_group_size.items()},
+            "ops": coll.ops,
+        },
+        "analytic": {
+            "flops_per_device": hlo_flops_dev,
+            "hbm_bytes_per_device": ana.hbm_bytes_per_device,
+            "model_flops_global": ana.model_flops_global,
+            "params_global": ana.params_global,
+            "model_vs_hlo_flops": mf_dev / hlo_flops_dev,
+            "microbatches": nm,
+        },
+        "roofline": terms,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": cfg.name, "shape": shape.name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    try:
+        return compile_cell(cfg, shape, multi_pod)
+    except Exception as e:  # a failure here is a bug in the system
+        return {"arch": cfg.name, "shape": shape.name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or not args.shape \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{ALIASES.get(arch, arch)}_{shape}_" + \
+                    ("multi" if mp else "single")
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                t0 = time.time()
+                res = run_cell(arch, shape, mp)
+                res["wall_s"] = round(time.time() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" frac={r['roofline_fraction']:.2f}"
+                             f" mem/dev={res['memory_analysis']['per_device_bytes']/2**30:.2f}GiB"
+                             f" compile={res['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = " " + res["error"][:120]
+                print(f"[{status}] {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

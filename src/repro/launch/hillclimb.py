@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede all other imports (jax locks device count on first init)
+
+"""Perf hillclimbing driver (§Perf methodology).
+
+Compiles one (arch x shape x mesh) cell under a named optimization variant,
+reports the three roofline terms plus the top collectives *with op-name
+provenance*, so each hypothesis -> change -> measure iteration is grounded
+in the compiled HLO rather than guesses.
+
+    python -m repro.launch.hillclimb --arch qwen2p5_14b --shape train_4k \
+        --variant baseline|bf16_cast|seqpar|seqpar+bf16 ...
+"""
+
+import argparse
+import json
+import re
+import time
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPE_BY_NAME, get_config, input_specs
+from repro.launch import roofline as rl
+from repro.launch.dryrun import default_microbatches
+from repro.launch.mesh import make_production_mesh
+from repro.train import train_step as ts
+
+VARIANTS = ("baseline", "bf16_cast", "seqpar", "seqpar+bf16", "dots_remat",
+            "sorted_moe", "sorted_moe+bf16", "kvrep", "mb4", "blend")
+
+
+def hyper_for(variant: str, cfg, shape, multi_pod: bool) -> ts.TrainHyper:
+    nm = default_microbatches(cfg, shape, multi_pod)
+    kw = dict(microbatches=nm, compress_cross_pod=multi_pod)
+    if "mb4" in variant:
+        kw["microbatches"] = 4
+    if "mb2" in variant:
+        kw["microbatches"] = 2
+    if "dots_remat" in variant:
+        kw["remat"] = "dots"
+    kw["cast_params_once"] = "bf16" in variant
+    kw["sequence_parallel"] = "seqpar" in variant
+    kw["moe_impl"] = "sorted" if "sorted_moe" in variant else "gshard"
+    return ts.TrainHyper(**kw)
+
+
+def top_collectives(hlo: str, k: int = 12):
+    """(kind, dtype+shape, op_name, bytes x trip) rows, largest first."""
+    comps = rl.split_computations(hlo)
+    entry = rl.entry_computation(hlo)
+    mult = {entry: 1.0}
+    for _ in range(20):
+        changed = False
+        for parent, body in comps.items():
+            pm = mult.get(parent)
+            if pm is None:
+                continue
+            for wm in rl._WHILE_RE.finditer(body):
+                for tgt, f in ((wm.group(1), 1.0),
+                               (wm.group(2), float(wm.group(3)))):
+                    if mult.get(tgt, 0) < pm * f:
+                        mult[tgt] = pm * f
+                        changed = True
+            for cm in rl._CALL_RE.finditer(body):
+                if mult.get(cm.group(1), 0) < pm:
+                    mult[cm.group(1)] = pm
+                    changed = True
+        if not changed:
+            break
+    rows = []
+    for comp, body in comps.items():
+        m_ = mult.get(comp, 0.0)
+        if not m_:
+            continue
+        for ln in body.splitlines():
+            mm = re.search(r"=.*?\s(all-gather|all-reduce|reduce-scatter|"
+                           r"all-to-all|collective-permute)(?:-start)?\(", ln)
+            if not mm:
+                continue
+            sh = rl._SHAPE_RE.search(ln)
+            if not sh:
+                continue
+            bts = rl._shape_bytes(sh.group(0)) * m_
+            op = re.search(r'op_name="([^"]+)"', ln)
+            opn = op.group(1)[-90:] if op else "?"
+            rows.append((mm.group(1), sh.group(0), opn, bts))
+    rows.sort(key=lambda r: -r[3])
+    agg = defaultdict(float)
+    for kind, shape_s, opn, b in rows:
+        agg[(kind, shape_s, opn)] += b
+    out = sorted(((k2[0], k2[1], k2[2], v) for k2, v in agg.items()),
+                 key=lambda r: -r[3])
+    return out[:k]
+
+
+def run(arch: str, shape_name: str, variant: str, multi_pod: bool,
+        show_top: bool = True):
+    import dataclasses
+    cfg = get_config(arch)
+    if "kvrep" in variant:
+        cfg = dataclasses.replace(cfg, force_kv_replicate=True)
+    if "moegroup" in variant:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, group_size=512))
+    if "cf1" in variant:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    hyper = hyper_for(variant, cfg, shape, multi_pod)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            jitted, astate, _, _ = ts.jit_train_step(cfg, mesh, hyper, shape)
+            ab = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in input_specs(cfg, shape).items()}
+            compiled = jitted.lower(astate, ab).compile()
+        elif shape.kind == "prefill":
+            jitted, aparams, _ = ts.jit_prefill(
+                cfg, mesh, shape,
+                replicate_params_over_data="replparams" in variant)
+            compiled = jitted.lower(aparams,
+                                    input_specs(cfg, shape)).compile()
+        else:
+            jitted, aparams, acaches, _ = ts.jit_decode_step(
+                cfg, mesh, shape,
+                cache_update="blend" if "blend" in variant else "dus",
+                replicate_params_over_data="replparams" in variant)
+            spec = input_specs(cfg, shape)
+            compiled = jitted.lower(aparams, acaches, spec["tokens"],
+                                    jnp.int32(0)).compile()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+    nm = hyper.microbatches if shape.kind == "train" else 1
+    ana = rl.analytic_costs(cfg, shape, n_chips, microbatches=nm,
+                            remat=hyper.remat if shape.kind == "train"
+                            else "none")
+    terms = rl.roofline_terms(ana.flops_per_device,
+                              ana.hbm_bytes_per_device,
+                              coll.tpu_corrected_bytes,
+                              model_flops_dev=ana.model_flops_global /
+                              n_chips)
+    ma = compiled.memory_analysis()
+    mem = (ma.argument_size_in_bytes + ma.temp_size_in_bytes +
+           ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    print(f"== {arch} x {shape_name} x "
+          f"{'2x16x16' if multi_pod else '16x16'} [{variant}] "
+          f"(compile {time.time()-t0:.0f}s) ==")
+    print(f" terms(ms): compute={terms['compute_s']*1e3:.1f} "
+          f"memory={terms['memory_s']*1e3:.1f} "
+          f"collective={terms['collective_s']*1e3:.1f} "
+          f"dominant={terms['dominant']} frac={terms['roofline_fraction']:.3f}")
+    print(f" collectives: raw {coll.total_bytes/2**30:.1f} / "
+          f"tpu-corrected {coll.tpu_corrected_bytes/2**30:.1f} GiB/dev "
+          f"{ {k: round(v/2**30,1) for k,v in coll.by_kind.items() if v} } "
+          f"mem/dev={mem/2**30:.2f} GiB")
+    if show_top:
+        for kind, shp, opn, b in top_collectives(hlo):
+            print(f"   {b/2**30:6.1f} GiB  {kind:18s} {shp:26s} {opn}")
+    return {"variant": variant, "terms": terms,
+            "collective_bytes": coll.total_bytes,
+            "tpu_corrected_bytes": coll.tpu_corrected_bytes,
+            "mem_dev": int(mem), "by_kind": dict(coll.by_kind)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(args.arch, args.shape, args.variant, args.multi)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+`make_production_mesh` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run (and only the
+dry-run) forces 512 placeholder host devices before calling it.
+
+Mesh shapes (TPU v5e-class pods):
+  single-pod:  (16, 16)      axes ("data", "model")        = 256 chips
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# v5e-class hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW_PER_LINK = 50e9         # bytes/s/link
+HBM_BYTES = 16 * (1 << 30)     # capacity

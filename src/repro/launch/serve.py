@@ -1,0 +1,53 @@
+"""Serving launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --reduced --requests 6 --max-new 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                      max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab,
+                              size=int(rng.integers(3, 8))).astype(np.int32)
+        eng.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
+    t0 = time.time()
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
+          f"({toks/max(dt,1e-9):.1f} tok/s)")
+    for r in done[:3]:
+        print(f"  req {r.rid}: {r.prompt.tolist()} -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

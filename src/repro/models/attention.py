@@ -1,0 +1,221 @@
+"""GQA attention: chunked (flash-style) training/prefill path + decode path.
+
+The chunked implementation is the *reference semantics* for the Pallas
+flash-attention kernel (`repro.kernels.flash_attention`); which backend runs
+is selected by ``impl`` ("ref" lowers everywhere and is used by the dry-run;
+"pallas" targets real TPUs and is validated against "ref" in interpret
+mode).  Both compute the same online-softmax recurrence, so the roofline
+FLOPs/bytes of the ref path are representative.
+
+KV-head handling under tensor parallelism: query heads are padded (config)
+to a multiple of the TP degree; when ``n_kv_heads < tp`` the KV projections
+are computed replicated and each shard uses its slice — the standard GQA
+replication scheme (documented waste shows up in the MODEL_FLOPS/HLO ratio).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.layers import apply_rope, cast
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int           # padded query heads (multiple of TP)
+    n_kv_heads: int        # effective kv heads after replication policy
+    head_dim: int
+    qkv_bias: bool = False
+    causal: bool = True
+    rope_theta: float = 10000.0
+    chunk_q: int = 512
+    chunk_k: int = 1024
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = cfg.d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(kq, (cfg.d_model, cfg.n_heads * cfg.head_dim),
+                                dtype) * s,
+        "wk": jax.random.normal(kk, (cfg.d_model,
+                                     cfg.n_kv_heads * cfg.head_dim), dtype) * s,
+        "wv": jax.random.normal(kv, (cfg.d_model,
+                                     cfg.n_kv_heads * cfg.head_dim), dtype) * s,
+        "wo": jax.random.normal(ko, (cfg.n_heads * cfg.head_dim, cfg.d_model),
+                                dtype) * (cfg.n_heads * cfg.head_dim) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.head_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.head_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.head_dim,), dtype)
+    return p
+
+
+def qkv_proj(params, cfg: AttnConfig, x, positions, compute_dtype=jnp.bfloat16):
+    B, S, _ = x.shape
+    x = cast(x, compute_dtype)
+    q = x @ cast(params["wq"], compute_dtype)
+    k = x @ cast(params["wk"], compute_dtype)
+    v = x @ cast(params["wv"], compute_dtype)
+    if cfg.qkv_bias:
+        q = q + cast(params["bq"], compute_dtype)
+        k = k + cast(params["bk"], compute_dtype)
+        v = v + cast(params["bv"], compute_dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_hint(q, "batch", "seq", "heads", "null")
+    k = shard_hint(k, "batch", "seq", "kv_heads", "null")
+    v = shard_hint(v, "batch", "seq", "kv_heads", "null")
+    return q, k, v
+
+
+def _expand_kv(k, n_heads: int):
+    """(B,S,Hkv,D) -> (B,S,H,D) by repeating each kv head for its q group."""
+    B, S, Hkv, D = k.shape
+    rep = n_heads // Hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def chunked_attention(q, k, v, causal: bool, chunk_q: int, chunk_k: int,
+                      kv_offset: int = 0):
+    """Flash-style online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, H, D).  Memory: O(Sq * chunk_k) per head.
+    `kv_offset`: absolute position of k[0] relative to q[0] (prefill = 0).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = D ** -0.5
+    nq = max(1, (Sq + chunk_q - 1) // chunk_q)
+    nk = max(1, (Sk + chunk_k - 1) // chunk_k)
+    cq = -(-Sq // nq)
+    ck = -(-Sk // nk)
+
+    qc = q.reshape(B, nq, cq, H, D).transpose(1, 0, 3, 2, 4)  # (nq,B,H,cq,D)
+    kc = k.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)
+
+    q_pos = jnp.arange(Sq).reshape(nq, cq)
+    k_pos = (jnp.arange(Sk) + kv_offset).reshape(nk, ck)
+
+    def per_q_chunk(qi, q_blk):
+        # online softmax over kv chunks
+        acc0 = jnp.zeros((B, H, cq, D), jnp.float32)
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+
+        def body(carry, inp):
+            acc, m, l = carry
+            k_blk, v_blk, kp = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            if causal:
+                mask = q_pos[qi][:, None] >= kp[None, :]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_blk.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, k_pos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B,H,cq,D)
+
+    outs = jax.vmap(per_q_chunk, in_axes=(0, 0))(jnp.arange(nq), qc)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def attention_train(params, cfg: AttnConfig, x, positions,
+                    compute_dtype=jnp.bfloat16, impl: str = "ref"):
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(params, cfg, x, positions, compute_dtype)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=cfg.causal)
+    else:
+        out = chunked_attention(q, k, v, cfg.causal,
+                                min(cfg.chunk_q, S), min(cfg.chunk_k, S))
+    out = shard_hint(out, "batch", "seq", "heads", "null")
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ cast(params["wo"], compute_dtype)
+
+
+# -- decode path -----------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
+                  dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(params, cfg: AttnConfig, x, cache, pos,
+                     compute_dtype=jnp.bfloat16, cache_update: str = "dus"):
+    """One-token decode: x (B,1,d); cache k/v (B,Smax,Hkv,D); pos scalar.
+
+    Cost is linear in cache length (no quadratic term); the KV cache may be
+    sharded along `cache_seq` (long-context / replicated-KV archs) or
+    `kv_heads` (TP).
+
+    cache_update:
+      "dus"   — dynamic_update_slice at `pos`.  When the cache is sharded
+                along the sequence axis, GSPMD cannot prove the dynamic
+                index touches one shard and falls back to
+                gather-update-scatter over ICI (measured ~0.5 GiB/layer/
+                token for a 32k cache — EXPERIMENTS.md §Perf).
+      "blend" — one-hot masked blend: elementwise over the sharded axis,
+                zero collectives; trades a full local cache rewrite (HBM)
+                for the ICI round-trip.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = qkv_proj(params, cfg, x, positions, compute_dtype)
+    if cache_update == "blend":
+        sel = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None, None]
+        k_cache = jnp.where(sel, k_new.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(sel, v_new.astype(cache["v"].dtype), cache["v"])
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+
+    # Grouped GQA attention — the kv heads are NEVER expanded/materialized
+    # (a jnp.repeat here breaks GSPMD sharding propagation on the
+    # sequence-sharded cache and forces a full per-layer cache all-gather:
+    # measured 99 GiB/device/token for qwen2.5-14b decode_32k before this
+    # formulation — EXPERIMENTS.md §Perf cell C).
+    Hkv = cfg.n_kv_heads
+    group = cfg.n_heads // Hkv
+    qg = q.reshape(B, 1, Hkv, group, cfg.head_dim).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * (cfg.head_dim ** -0.5)
+    mask = jnp.arange(kf.shape[1])[None, None, None, None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(compute_dtype)
+    out = out @ cast(params["wo"], compute_dtype)
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,107 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure functional JAX.  Parameters are plain pytrees; compute dtype policy is
+explicit (params live in ``param_dtype``, compute is in ``compute_dtype``,
+reductions / softmax / loss in f32).  Activation sharding hints go through
+`repro.distributed.sharding.shard_hint` (no-op on a single device).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    # stored as (scale - 1) so zero-init == identity
+    return jnp.zeros((d,), dtype)
+
+
+# -- rotary position embeddings ------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                   # (...,S,1,hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs -----------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_ff,
+    }
+
+
+def mlp_swiglu(params, x, compute_dtype=jnp.bfloat16):
+    """SwiGLU MLP (llama/qwen/yi family)."""
+    x = cast(x, compute_dtype)
+    gate = x @ cast(params["w_gate"], compute_dtype)
+    up = x @ cast(params["w_up"], compute_dtype)
+    h = jax.nn.silu(gate) * up
+    h = shard_hint(h, "batch", "seq", "mlp")
+    return h @ cast(params["w_down"], compute_dtype)
+
+
+def mlp_gelu(params, x, compute_dtype=jnp.bfloat16):
+    """GELU MLP (hubert / classic encoder stacks); reuses w_up/w_down."""
+    x = cast(x, compute_dtype)
+    h = jax.nn.gelu(x @ cast(params["w_up"], compute_dtype))
+    h = shard_hint(h, "batch", "seq", "mlp")
+    return h @ cast(params["w_down"], compute_dtype)
+
+
+# -- embeddings -------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"tokens": jax.random.normal(key, (vocab, d_model), dtype)
+            * (d_model ** -0.5)}
+
+
+def embed_tokens(params, tokens, compute_dtype=jnp.bfloat16):
+    out = jnp.take(cast(params["tokens"], compute_dtype), tokens, axis=0)
+    return shard_hint(out, "batch", "seq", "embed_act")
+
+
+def init_unembed(key, d_model: int, vocab: int, dtype=jnp.float32):
+    return {"unembed": jax.random.normal(key, (d_model, vocab), dtype)
+            * (d_model ** -0.5)}
+
+
+def unembed_logits(params, x, compute_dtype=jnp.bfloat16):
+    """Returns vocab-sharded logits in f32 (loss numerics)."""
+    logits = cast(x, compute_dtype) @ cast(params["unembed"], compute_dtype)
+    logits = shard_hint(logits, "batch", "seq", "vocab")
+    return logits.astype(jnp.float32)

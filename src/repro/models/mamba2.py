@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) block: chunked scan + O(1) decode.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; within a chunk the quadratic "attention-like" form is
+used, and a tiny recurrence carries the (heads, head_dim, d_state) state
+across chunks.  This chunked form is the reference semantics for the Pallas
+`ssd_scan` kernel and is what the dry-run lowers.
+
+Scalar-A parameterization (Mamba2): per-head decay a_t = exp(dt * -exp(A_log)),
+B/C shared across heads within a group (n_groups = 1 here, as in the 2.7b
+config).  Head layout: d_inner = n_heads * head_dim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.layers import cast
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba(key, cfg: MambaConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    di, hs = cfg.d_inner, cfg.n_heads
+    # in_proj packs [z (gate), x, B, C, dt] as in the reference implementation
+    d_in_proj = 2 * di + 2 * cfg.d_state + hs
+    s = cfg.d_model ** -0.5
+    conv_dim = di + 2 * cfg.d_state
+    return {
+        "in_proj": jax.random.normal(ks[0], (cfg.d_model, d_in_proj), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, hs).astype(dtype))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, hs).astype(dtype)),
+        "D": jnp.ones((hs,), dtype),
+        "norm_w": jnp.zeros((di,), dtype),     # gated RMSNorm scale - 1
+        "out_proj": jax.random.normal(ks[4], (di, cfg.d_model), dtype)
+        * di ** -0.5,
+    }
+
+
+def _split_proj(cfg: MambaConfig, zxbcdt):
+    di, ds, hs = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    B = zxbcdt[..., 2 * di:2 * di + ds]
+    C = zxbcdt[..., 2 * di + ds:2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  x: (B,S,C); w: (K,C); returns (y, new_state)
+    where state is the last K-1 inputs (for decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B,S+K-1,C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def gated_rms_norm(x, z, weight, eps: float = 1e-6):
+    """Mamba2's norm: RMSNorm(x * silu(z)) * w."""
+    h = x * jax.nn.silu(z)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    out = hf * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial_state=None,
+                impl: str = "ref"):
+    """SSD scan.  Shapes:
+      x: (b, S, h, p)   dt: (b, S, h)   A: (h,)  [negative decay rates]
+      B, C: (b, S, n)   D: (h,)
+    Returns (y: (b,S,h,p), final_state: (b,h,p,n)).
+    """
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        return ssd_ops.ssd_scan(x, dt, A, B, C, D, chunk=chunk,
+                                initial_state=initial_state)
+    return ssd_chunked_ref(x, dt, A, B, C, D, chunk, initial_state)
+
+
+def ssd_chunked_ref(x, dt, A, B, C, D, chunk: int, initial_state=None):
+    b, S, h, p = x.shape
+    n = B.shape[-1]
+    nc = max(1, (S + chunk - 1) // chunk)
+    L = -(-S // nc)  # chunk length
+    assert nc * L == S, "seq must divide into equal chunks"
+
+    xf = x.astype(jnp.float32).reshape(b, nc, L, h, p)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32)).reshape(b, nc, L, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, L, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, L, n)
+    Af = A.astype(jnp.float32)
+
+    # per-step log decay: (b,nc,L,h)
+    dA = dtf * Af[None, None, None, :]
+    seg = jnp.cumsum(dA, axis=2)                      # cumulative within chunk
+
+    # intra-chunk (quadratic) term: y_intra[t] = sum_{s<=t} C_t.B_s x_s decay
+    # mask BEFORE the exp: the upper triangle has positive exponents whose
+    # overflow would poison the backward pass (inf * 0 -> NaN).
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]   # (b,nc,L,L,h)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    cb = jnp.einsum("bcln,bcmn->bclm", Cf, Bf)        # (b,nc,L,L)
+    att = cb[..., None] * decay * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", att, xf)
+
+    # chunk summaries: state contribution of each chunk
+    chunk_decay = jnp.exp(seg[:, :, -1:, :] - seg)    # decay to chunk end
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                        chunk_decay * dtf, Bf, xf)    # (b,nc,h,p,n)
+
+    # inter-chunk recurrence over nc chunks
+    total = jnp.exp(seg[:, :, -1, :])                 # (b,nc,h) full-chunk decay
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def body(carry, inp):
+        st_in = carry
+        st_chunk, dec = inp                            # (b,h,p,n), (b,h)
+        out_state = st_in                              # state BEFORE this chunk
+        st_next = st_in * dec[..., None, None] + st_chunk
+        return st_next, out_state
+
+    final, st_before = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    st_before = st_before.transpose(1, 0, 2, 3, 4)     # (b,nc,h,p,n)
+
+    # inter-chunk contribution: y_inter[t] = C_t . (decay_to_t * state_in)
+    in_decay = jnp.exp(seg)                            # decay from chunk start
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cf, in_decay, st_before)
+
+    y = (y_intra + y_inter).reshape(b, S, h, p)
+    y = y + xf.reshape(b, S, h, p) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def mamba_block(params, cfg: MambaConfig, x, compute_dtype=jnp.bfloat16,
+                impl: str = "ref"):
+    """Full Mamba2 block (training / prefill).  x: (B,S,d_model)."""
+    Bsz, S, _ = x.shape
+    zxbcdt = cast(x, compute_dtype) @ cast(params["in_proj"], compute_dtype)
+    z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, cast(params["conv_w"], compute_dtype),
+                               cast(params["conv_b"], compute_dtype))
+    xs = conv_out[..., :cfg.d_inner]
+    B = conv_out[..., cfg.d_inner:cfg.d_inner + cfg.d_state]
+    C = conv_out[..., cfg.d_inner + cfg.d_state:]
+    xh = xs.reshape(Bsz, S, cfg.n_heads, cfg.head_dim)
+    xh = shard_hint(xh, "batch", "seq", "heads", "null")
+    dt = dt + cast(params["dt_bias"], compute_dtype)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xh, dt, A, B, C, params["D"], cfg.chunk, impl=impl)
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = gated_rms_norm(y, z, params["norm_w"])
+    return cast(y, compute_dtype) @ cast(params["out_proj"], compute_dtype)
+
+
+# -- decode (O(1) per token) -------------------------------------------------------
+
+def init_mamba_cache(batch: int, cfg: MambaConfig, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         dtype),
+    }
+
+
+def mamba_decode_step(params, cfg: MambaConfig, x, cache,
+                      compute_dtype=jnp.bfloat16):
+    """x: (B,1,d_model) -> (y, new_cache).  Constant work per token."""
+    Bsz = x.shape[0]
+    zxbcdt = cast(x, compute_dtype) @ cast(params["in_proj"], compute_dtype)
+    z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)       # (B,1,conv_dim)
+    conv_out, conv_state = _causal_conv(
+        conv_in, cast(params["conv_w"], compute_dtype),
+        cast(params["conv_b"], compute_dtype), state=cache["conv"])
+    xs = conv_out[..., :cfg.d_inner]
+    B = conv_out[..., cfg.d_inner:cfg.d_inner + cfg.d_state]
+    C = conv_out[..., cfg.d_inner + cfg.d_state:]
+    xh = xs.reshape(Bsz, cfg.n_heads, cfg.head_dim).astype(jnp.float32)
+    dtv = jax.nn.softplus((dt[:, 0] + params["dt_bias"]).astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dtv * A[None, :])                       # (B,h)
+    Bv = B[:, 0].astype(jnp.float32)                      # (B,n)
+    Cv = C[:, 0].astype(jnp.float32)
+    st = cache["ssm"].astype(jnp.float32)
+    st = st * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh, Bv)
+    y = jnp.einsum("bhpn,bn->bhp", st, Cv) + xh * params["D"].astype(
+        jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, cfg.d_inner)
+    y = gated_rms_norm(y.astype(compute_dtype), z, params["norm_w"])
+    out = cast(y, compute_dtype) @ cast(params["out_proj"], compute_dtype)
+    return out, {"conv": conv_state.astype(cache["conv"].dtype),
+                 "ssm": st.astype(cache["ssm"].dtype)}

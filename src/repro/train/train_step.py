@@ -1,0 +1,271 @@
+"""pjit train/serve step builders: mixed precision, remat, grad-accum scan,
+FSDP/TP/EP shardings, cross-pod gradient compression.
+
+`build_train_step(cfg, mesh, ...)` returns (step_fn, shardings) where
+step_fn(state, batch) -> (state, metrics) is ready for jax.jit with the
+returned in/out shardings.  The grad-accumulation microbatch scan keeps the
+reduce-scatter of FSDP gradients *inside* the scan, which overlaps gradient
+communication with the next microbatch's compute under XLA's latency-hiding
+scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.optim import adamw, grad_compress
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    adamw: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+    microbatches: int = 1
+    remat: str = "full"           # "none" | "dots" | "full"
+    compute_dtype: Any = jnp.bfloat16
+    compress_cross_pod: bool = False
+    impl: str = "ref"             # kernel backend
+    # -- hillclimb knobs (see launch/hillclimb.py + EXPERIMENTS.md §Perf) --
+    cast_params_once: bool = False   # bf16-cast sharded params before use
+                                     # (halves FSDP all-gather bytes)
+    sequence_parallel: bool = False  # Megatron-SP residuals: seq sharded on
+                                     # "model" between TP regions
+    moe_impl: str = "gshard"         # "gshard" | "sorted" dispatch
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    ef: Any                        # error-feedback buffers (or None-like)
+
+
+def arch_rules(cfg: ArchConfig,
+               shape: Optional[ShapeSpec] = None,
+               mesh: Optional[Mesh] = None) -> Dict[str, Optional[object]]:
+    rules = dict(shd.DEFAULT_RULES)
+    rules.update(cfg.sharding_overrides)
+    if shape is not None and mesh is not None:
+        # batch too small for the data axes (long_500k: batch=1): leave the
+        # batch unsharded and shard the KV-cache/sequence over "data"
+        dp = 1
+        bmap = rules.get("batch")
+        for ax in (bmap if isinstance(bmap, tuple) else (bmap,)):
+            if ax in mesh.shape:
+                dp *= mesh.shape[ax]
+        if shape.global_batch % max(dp, 1) != 0:
+            rules["batch"] = None
+            rules["cache_seq"] = "data"
+    return rules
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, kind: str,
+                shape: Optional[ShapeSpec] = None) -> Dict[str, P]:
+    rules = arch_rules(cfg, shape, mesh)
+    bspec = shd.resolve(rules, mesh, "batch")
+    b = bspec[0] if len(bspec) else None
+    specs: Dict[str, P] = {}
+    if cfg.family == "encoder":
+        specs["frames"] = P(b, None, None)
+    else:
+        specs["tokens"] = P(b, None)
+    if kind == "train":
+        specs["targets"] = P(b, None)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(b, None, None)
+    if kind == "decode":
+        specs = {"tokens": P(b, None), "pos": P()}
+    return specs
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh, abstract_state: TrainState):
+    rules = arch_rules(cfg)
+    pshard = shd.param_sharding(abstract_state.params, mesh, rules)
+    oshard = adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=shd.param_sharding(abstract_state.opt.mu, mesh, rules),
+        nu=shd.param_sharding(abstract_state.opt.nu, mesh, rules))
+    efshard = (shd.param_sharding(abstract_state.ef, mesh, rules)
+               if abstract_state.ef is not None else None)
+    return TrainState(params=pshard, opt=oshard, ef=efshard)
+
+
+def make_train_state(cfg: ArchConfig, hyper: TrainHyper, key) -> TrainState:
+    params = lm.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw.init_state(params),
+                      ef=(grad_compress.init_error_state(params)
+                          if hyper.compress_cross_pod else None))
+
+
+def abstract_train_state(cfg: ArchConfig, hyper: TrainHyper) -> TrainState:
+    return jax.eval_shape(
+        functools.partial(make_train_state, cfg, hyper),
+        jax.random.PRNGKey(0))
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, hyper: TrainHyper):
+    """Returns (step_fn, in_shardings, out_shardings, batch_sharding)."""
+    rules = arch_rules(cfg)
+    if hyper.sequence_parallel:
+        rules = {**rules, "seq_act": "model"}
+
+    def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        with shd.use_mesh_rules(mesh, rules):
+            nm = hyper.microbatches
+
+            def micro(b):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]),
+                    b)
+
+            def loss_of(p, mb):
+                if hyper.cast_params_once:
+                    # cast the *sharded* master params; GSPMD then all-
+                    # gathers bf16 instead of f32 (grads still land in f32
+                    # through the convert's transpose)
+                    p = jax.tree_util.tree_map(
+                        lambda a: a.astype(hyper.compute_dtype)
+                        if (a.dtype == jnp.float32 and a.ndim >= 2) else a,
+                        p)
+                return lm.loss_fn(cfg, p, mb,
+                                  compute_dtype=hyper.compute_dtype,
+                                  impl=hyper.impl, remat=hyper.remat,
+                                  moe_impl=hyper.moe_impl)
+
+            if nm == 1:
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(state.params, batch)
+            else:
+                mbatch = micro(batch)
+                zero = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+                grads, metrics = _accum_loop(loss_of, state.params, mbatch,
+                                             zero)
+                grads = jax.tree_util.tree_map(lambda g: g / nm, grads)
+
+            ef = state.ef
+            if hyper.compress_cross_pod and ef is not None:
+                grads, ef = grad_compress.compress_grads(grads, ef)
+
+            params, opt, opt_metrics = adamw.apply_updates(
+                hyper.adamw, state.params, grads, state.opt)
+            metrics = {**metrics, **opt_metrics}
+            return TrainState(params, opt, ef), metrics
+
+    return step_fn
+
+
+def _accum_loop(loss_of, params, mbatch, zero):
+    """Microbatch scan accumulating f32 grads and mean metrics."""
+    def accum(g_acc, mb):
+        (_, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return g_acc, m
+
+    grads, ms = jax.lax.scan(accum, zero, mbatch)
+    metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+    return grads, metrics
+
+
+def jit_train_step(cfg: ArchConfig, mesh: Mesh, hyper: TrainHyper,
+                   shape: ShapeSpec):
+    """Fully-specified jit of the train step for (cfg, mesh, shape)."""
+    astate = abstract_train_state(cfg, hyper)
+    st_shard = state_shardings(cfg, mesh, astate)
+    bspecs = batch_specs(cfg, mesh, "train")
+    bshard = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+    step_fn = build_train_step(cfg, mesh, hyper)
+    jitted = jax.jit(step_fn,
+                     in_shardings=(st_shard, bshard),
+                     out_shardings=(st_shard, None),
+                     donate_argnums=(0,))
+    return jitted, astate, st_shard, bshard
+
+
+# -- serving steps ------------------------------------------------------------------
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, caches, rules=None):
+    rules = rules or arch_rules(cfg)
+
+    def named(logical, ndim):
+        spec = shd.resolve(rules, mesh, *logical[:ndim])
+        return NamedSharding(mesh, spec)
+
+    def spec_for(path, x):
+        p = shd.path_str(path)
+        if "attn" in p:  # (L, B, S, Hkv, dh)
+            return named(("layers", "batch", "cache_seq", "kv_heads",
+                          "null"), x.ndim)
+        if "conv" in p:  # (L, B, K-1, C)
+            return named(("layers", "batch", "null", "mlp"), x.ndim)
+        if "ssm" in p:   # (L, B, h, p, n)
+            return named(("layers", "batch", "heads", "null", "null"),
+                         x.ndim)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def jit_decode_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+                    dtype=jnp.bfloat16, cache_update: str = "dus",
+                    replicate_params_over_data: bool = False):
+    """One-token serve step against a seq_len KV cache.
+
+    `replicate_params_over_data`: serving holds no optimizer state, so
+    FSDP-sharding params over "data" only forces a param re-gather per
+    decoded token; replicating them (TP-sharding only) trades HBM capacity
+    for zero per-token gather traffic (§Perf cell C iteration 3).
+    """
+    rules = arch_rules(cfg, shape, mesh)
+    if replicate_params_over_data:
+        rules = {**rules, "embed": None}
+    aparams = lm.abstract_params(cfg, dtype)
+    pshard = shd.param_sharding(aparams, mesh, rules)
+    acaches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                               dtype))
+    cshard = cache_shardings(cfg, mesh, acaches, rules=rules)
+    bspecs = batch_specs(cfg, mesh, "decode", shape)
+    bshard = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+
+    def step(params, caches, tokens, pos):
+        with shd.use_mesh_rules(mesh, rules):
+            return lm.decode_step(cfg, params, caches, tokens, pos, dtype,
+                                  cache_update=cache_update)
+
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, cshard, bshard["tokens"],
+                                   bshard["pos"]),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(1,))
+    return jitted, aparams, acaches, (pshard, cshard, bshard)
+
+
+def jit_prefill(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+                dtype=jnp.bfloat16, impl: str = "ref",
+                replicate_params_over_data: bool = False):
+    rules = arch_rules(cfg)
+    if replicate_params_over_data:     # serving: no optimizer state
+        rules = {**rules, "embed": None}
+    aparams = lm.abstract_params(cfg, dtype)
+    pshard = shd.param_sharding(aparams, mesh, rules)
+    bspecs = batch_specs(cfg, mesh, "prefill")
+    bshard = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+
+    def step(params, batch):
+        with shd.use_mesh_rules(mesh, rules):
+            return lm.prefill(cfg, params, batch, shape.seq_len, dtype,
+                              impl)
+
+    jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                     out_shardings=None)
+    return jitted, aparams, (pshard, bshard)

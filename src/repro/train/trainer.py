@@ -1,0 +1,106 @@
+"""Fault-tolerant training loop.
+
+Wires together: data pipeline (stateless-resumable), jitted train step,
+async checkpointing, the CacheX-TPU monitor (probe between steps — the
+paper's pause-the-world window becomes the step boundary), CAS-TPU
+straggler mitigation, and restart-from-latest semantics.
+
+The loop is deliberately restart-oriented: `Trainer.run()` can be killed at
+any step and re-invoked; it resumes from the latest complete checkpoint
+with an identical data stream (batches are a pure function of (seed, step)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.data.pipeline import DataConfig, make_batch
+from repro.distributed.rebalance import StragglerMitigator
+from repro.tpuprobe.monitor import PodMonitor, SimClock
+from repro.train import train_step as ts
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    monitor_every: int = 1
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                 hyper: ts.TrainHyper, tcfg: TrainerConfig,
+                 monitor: Optional[PodMonitor] = None):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        self.hyper, self.tcfg = hyper, tcfg
+        self.monitor = monitor
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        self.mitigator = StragglerMitigator(
+            n_devices=len(mesh.devices.flat) // max(1, mesh.shape.get("model", 1)),
+            total_microbatches=hyper.microbatches * max(
+                1, mesh.shape.get("data", 1)))
+        self.checkpointer = ckpt.AsyncCheckpointer(tcfg.ckpt_dir,
+                                                   keep=tcfg.keep)
+        self.metrics_log: List[Dict] = []
+
+        self._jitted, self._astate, self._st_shard, self._bshard = \
+            ts.jit_train_step(cfg, mesh, hyper, shape)
+
+    # -- state management -------------------------------------------------------
+    def init_or_restore(self, seed: int = 0):
+        latest = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if latest is not None:
+            state = ckpt.restore(self.tcfg.ckpt_dir, latest, self._astate,
+                                 self._st_shard)
+            return state, latest
+        with self.mesh:
+            state = jax.jit(
+                lambda k: ts.make_train_state(self.cfg, self.hyper, k),
+                out_shardings=self._st_shard)(jax.random.PRNGKey(seed))
+        return state, 0
+
+    def _device_batch(self, step: int):
+        host = make_batch(self.tcfg.data, self.cfg, self.shape, step)
+        return {k: jax.device_put(
+            v if k != "frames" and k != "patch_embeds"
+            else v.astype(jnp.bfloat16), self._bshard[k])
+            for k, v in host.items() if k in self._bshard}
+
+    # -- the loop -----------------------------------------------------------------
+    def run(self, n_steps: int, seed: int = 0) -> List[Dict]:
+        state, start = self.init_or_restore(seed)
+        with self.mesh:
+            for step in range(start, n_steps):
+                batch = self._device_batch(step)
+                t0 = time.time()
+                state, metrics = self._jitted(state, batch)
+                loss = float(metrics["loss"])
+                rec = {"step": step + 1, "loss": loss,
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "lr": float(metrics["lr"]),
+                       "wall_s": time.time() - t0}
+                # CacheX-TPU monitoring between steps (probe window)
+                if self.monitor and (step % self.tcfg.monitor_every == 0):
+                    self.monitor.probe_once()
+                    plan = self.mitigator.update(
+                        self.monitor.per_device_slowdown()[
+                            :self.mitigator.n_devices])
+                    rec["mb_plan"] = plan.tolist()
+                self.metrics_log.append(rec)
+                if (step + 1) % self.tcfg.ckpt_every == 0 or \
+                        step + 1 == n_steps:
+                    self.checkpointer.save_async(step + 1, state)
+        self.checkpointer.wait()
+        return self.metrics_log

@@ -1,0 +1,44 @@
+"""Shared fixtures: small simulated machines (fast) for core CacheX tests.
+
+NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here —
+smoke tests and benches must see the real single CPU device; only
+`launch/dryrun.py` forces 512 placeholder devices (in its own process).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cachesim import CacheGeometry, MachineGeometry
+from repro.core.host_model import GuestVM, SimHost
+
+# Small but structurally faithful geometry:
+#   L2: 256 sets x 8 ways  -> 4 page colors (hpage bits 1:0)
+#   LLC: 512 sets x 8 ways x 2 slices -> 8 uncontrollable row-groups
+SMALL_L2 = CacheGeometry(n_sets=256, n_ways=8)
+SMALL_LLC = CacheGeometry(n_sets=512, n_ways=8, n_slices=2)
+N_COLORS = 4          # L2 colors in the small geometry
+N_ROWS_PER_OFFSET = 8  # distinct LLC set indices reachable at one offset
+
+
+def make_vm(n_domains=1, cores_per_domain=2, mapping="fragmented", seed=0,
+            n_guest_pages=1 << 13, vcpu_cores=None, replacement="lru",
+            llc=SMALL_LLC):
+    geom = MachineGeometry(n_domains=n_domains,
+                           cores_per_domain=cores_per_domain,
+                           l2=SMALL_L2, llc=llc, replacement=replacement)
+    host = SimHost(geom, n_host_pages=1 << 14, seed=seed)
+    if vcpu_cores is None:
+        vcpu_cores = list(range(geom.n_cores))
+    vm = GuestVM(host, n_guest_pages=n_guest_pages, mapping=mapping,
+                 vcpu_cores=vcpu_cores, seed=seed)
+    return host, vm
+
+
+@pytest.fixture
+def small_vm():
+    return make_vm()
+
+
+@pytest.fixture
+def contiguous_vm():
+    return make_vm(mapping="contiguous")

@@ -1,0 +1,104 @@
+"""CAS tests: paper §4.1 / Fig 10 behaviours + tier-tracker properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cas import (MiniSched, PlacementRequest, SimTask, TierTracker,
+                            allow_pull, select_vcpu)
+
+
+def test_tier_requires_three_consistent_intervals():
+    tt = TierTracker(keys=[0], thresholds=[1.0])
+    assert tt.update({0: 5.0})[0] == 0    # 1st high reading: no change
+    assert tt.update({0: 5.0})[0] == 0    # 2nd: no change
+    assert tt.update({0: 5.0})[0] == 1    # 3rd consecutive: commit
+    # transient dip does not demote
+    tt.update({0: 0.1}); tt.update({0: 5.0}); tt.update({0: 0.1})
+    assert tt.tier[0] == 1
+    tt.update({0: 0.1}); tt.update({0: 0.1}); tt.update({0: 0.1})
+    assert tt.tier[0] == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(rates=st.lists(st.floats(0, 10), min_size=1, max_size=10),
+       flips=st.integers(0, 2))
+def test_property_tier_stable_under_transients(rates, flips):
+    """No single (or double) deviating interval may change a committed tier."""
+    tt = TierTracker(keys=[0], thresholds=[1.0])
+    for _ in range(3):
+        tt.update({0: 0.0})
+    committed = tt.tier[0]
+    for _ in range(flips):
+        tt.update({0: 9.0})
+    if flips < 3:
+        assert tt.tier[0] == committed
+
+
+def test_select_vcpu_prefers_quiet_domain_over_affinity():
+    vcpu_domain = {0: 0, 1: 0, 2: 1, 3: 1}
+    tiers = {0: 2, 1: 0}                        # domain 0 polluted
+    got = select_vcpu([0, 1, 2, 3], vcpu_domain, tiers,
+                      PlacementRequest(prev_vcpu=0))
+    assert vcpu_domain[got] == 1                # leaves its warm cache behind
+
+
+def test_select_vcpu_keeps_affinity_within_tier():
+    vcpu_domain = {0: 0, 1: 0, 2: 1, 3: 1}
+    tiers = {0: 0, 1: 0}
+    assert select_vcpu([0, 1, 2, 3], vcpu_domain, tiers,
+                       PlacementRequest(prev_vcpu=3)) == 3
+    assert select_vcpu([0, 1, 2], vcpu_domain, tiers,
+                       PlacementRequest(waker_vcpu=3)) == 2
+
+
+def test_allow_pull_guard():
+    tiers = {0: 0, 1: 2}
+    assert allow_pull(1, 0, tiers, src_utilization=0.2)       # to quieter: ok
+    assert not allow_pull(0, 1, tiers, src_utilization=0.2)   # to hotter: no
+    assert allow_pull(0, 1, tiers, src_utilization=0.95)      # unless saturated
+
+
+def _run_minisched(policy, ticks=60, seed=0):
+    vcpu_domain = {v: (0 if v < 8 else 1) for v in range(16)}
+    contention = {0: 8.0, 1: 0.2}       # domain 0 polluted (Fig 10 setup)
+    rates = {0: 8.0, 1: 0.2}
+    tt = TierTracker(keys=[0, 1], thresholds=[1.0, 4.0])
+    sched = MiniSched(vcpu_domain, policy, tier_tracker=tt, seed=seed)
+    tasks = [SimTask(f"t{i}", sensitivity=1.0, vcpu=i) for i in range(8)]
+    for _ in range(ticks):
+        sched.tick(tasks, contention, rates)
+    thr = sum(t.done_work for t in tasks)
+    res = sched.domain_residency
+    polluted_frac = np.mean([res[t.name].get(0, 0) /
+                             max(1, sum(res[t.name].values()))
+                             for t in tasks])
+    return thr, polluted_frac
+
+
+def test_cas_beats_affinity_under_asymmetric_contention():
+    """Fig 10: CAS steers tasks off the polluted domain; EEVDF-like affinity
+    keeps them there ('silo 16% vs 40-60% residency')."""
+    thr_eevdf, frac_eevdf = _run_minisched("eevdf")
+    thr_rusty, frac_rusty = _run_minisched("rusty")
+    thr_cas, frac_cas = _run_minisched("cas")
+    assert thr_cas > 1.2 * thr_eevdf
+    assert thr_cas > 1.2 * thr_rusty
+    assert frac_cas < 0.25
+    assert frac_eevdf > 0.4
+
+
+def test_cas_equivalent_when_symmetric():
+    """No regression when contention is symmetric (sanity)."""
+    vcpu_domain = {v: (0 if v < 4 else 1) for v in range(8)}
+    contention = {0: 1.0, 1: 1.0}
+    rates = dict(contention)
+    tt = TierTracker(keys=[0, 1])
+    out = {}
+    for policy in ("eevdf", "cas"):
+        sched = MiniSched(vcpu_domain, policy, tier_tracker=tt, seed=1)
+        tasks = [SimTask(f"t{i}", 1.0, vcpu=i) for i in range(4)]
+        for _ in range(40):
+            sched.tick(tasks, contention, rates)
+        out[policy] = sum(t.done_work for t in tasks)
+    assert out["cas"] == pytest.approx(out["eevdf"], rel=0.05)

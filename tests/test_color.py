@@ -1,0 +1,103 @@
+"""VCOL tests: paper §3.2, Table 4, Fig 3b, Fig 9 behaviours."""
+
+import numpy as np
+import pytest
+
+from repro.core.color import VCOL, color_accuracy, gpa_color_spread
+from repro.core.eviction import VEV
+from tests.conftest import make_vm, N_COLORS
+
+
+@pytest.fixture(scope="module")
+def vcol_setup():
+    host, vm = make_vm(mapping="fragmented", seed=3)
+    vcol = VCOL(vm)
+    cf = vcol.build_color_filters(n_colors=N_COLORS, ways=8, seed=11)
+    return host, vm, vcol, cf
+
+
+def test_filter_count_and_distinct_colors(vcol_setup):
+    host, vm, vcol, cf = vcol_setup
+    assert cf.n_colors == N_COLORS
+    true_colors = [vm.hypercall_l2_color(int(es.gvas[0]) >> 12) % N_COLORS
+                   for es in cf.filters]
+    assert len(set(true_colors)) == N_COLORS
+    # replicated filters sit at distinct aligned offsets
+    assert len(set(int(o) for o in cf.offsets)) == N_COLORS
+    assert all(int(o) % 64 == 0 for o in cf.offsets)
+
+
+def test_parallel_filtering_100pct_accuracy(vcol_setup):
+    """Paper §6.2: '100% correct color identification' (via hypercall)."""
+    host, vm, vcol, cf = vcol_setup
+    pages = vm.alloc_pages(96)
+    colors = vcol.identify_colors_parallel(cf, pages)
+    assert color_accuracy(vm, pages, colors, N_COLORS) == 1.0
+    vm.free_pages(pages)
+
+
+def test_parallel_matches_sequential(vcol_setup):
+    host, vm, vcol, cf = vcol_setup
+    pages = vm.alloc_pages(24)
+    par = vcol.identify_colors_parallel(cf, pages)
+    seq = np.array([vcol.identify_color_sequential(cf, int(p))
+                    for p in pages])
+    assert np.array_equal(par, seq)
+    vm.free_pages(pages)
+
+
+def test_parallel_filtering_is_cheaper(vcol_setup):
+    """Table 4: parallel filtering does ~n_colors x fewer passes."""
+    host, vm, vcol, cf = vcol_setup
+    pages = vm.alloc_pages(32)
+    before = vm.stat_passes
+    vcol.identify_colors_parallel(cf, pages)
+    par_passes = vm.stat_passes - before
+    before = vm.stat_passes
+    for p in pages:
+        vcol.identify_color_sequential(cf, int(p))
+    seq_passes = vm.stat_passes - before
+    assert par_passes * 4 < seq_passes
+    vm.free_pages(pages)
+
+
+def test_free_lists_partition_pages(vcol_setup):
+    host, vm, vcol, cf = vcol_setup
+    pages = vm.alloc_pages(64)
+    lists = vcol.build_free_lists(cf, pages)
+    got = sorted(p for lst in lists.values() for p in lst)
+    assert got == sorted(int(p) for p in pages)
+    vm.free_pages(pages)
+
+
+def test_gpa_color_unreliable_under_fragmentation():
+    """Fig 3b: with fragmented backing, one GPA color spreads over many HPA
+    colors; with contiguous backing it maps to a single HPA color."""
+    _, vm_frag = make_vm(mapping="fragmented", seed=7)
+    _, vm_cont = make_vm(mapping="contiguous", seed=7)
+    pages = np.arange(256)
+    spread_frag = gpa_color_spread(vm_frag, pages, N_COLORS)
+    spread_cont = gpa_color_spread(vm_cont, pages, N_COLORS)
+    for g, hist in spread_cont.items():
+        assert (hist > 0).sum() == 1     # contiguous: GPA color == HPA color
+    assert any((hist > 0).sum() >= 3 for hist in spread_frag.values())
+
+
+def test_remap_breaks_virtual_colors_and_rebuild_restores():
+    """Fig 9: hypervisor page remapping invalidates virtual colors; vcol
+    rebuild (new filters + refiltering) restores 100% accuracy."""
+    host, vm = make_vm(mapping="contiguous", seed=9)
+    vcol = VCOL(vm)
+    cf = vcol.build_color_filters(n_colors=N_COLORS, ways=8, seed=13)
+    pages = vm.alloc_pages(48)
+    colors_before = vcol.identify_colors_parallel(cf, pages)
+    assert color_accuracy(vm, pages, colors_before, N_COLORS) == 1.0
+    # hypervisor silently remaps 60% of guest pages
+    vm._page_table = host.remap_pages(vm._page_table, 0.6)
+    acc_stale = color_accuracy(vm, pages, colors_before, N_COLORS)
+    assert acc_stale < 1.0
+    # rebuild color filters and refilter -> accuracy restored
+    vcol2 = VCOL(vm)
+    cf2 = vcol2.build_color_filters(n_colors=N_COLORS, ways=8, seed=14)
+    colors_after = vcol2.identify_colors_parallel(cf2, pages)
+    assert color_accuracy(vm, pages, colors_after, N_COLORS) == 1.0

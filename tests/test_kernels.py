@@ -1,0 +1,178 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cache_probe import ops as probe_ops, ref as probe_ref
+from repro.kernels.cache_probe.kernel import triad
+from repro.kernels.cachesim_step import ops as sim_ops, ref as sim_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# -- flash attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,causal", [
+    (1, 128, 2, 2, 64, True),
+    (2, 256, 4, 2, 64, True),
+    (1, 256, 4, 1, 128, True),      # strong GQA grouping
+    (2, 128, 2, 2, 128, False),     # bidirectional (encoder)
+    (1, 384, 6, 2, 64, True),       # non-power-of-two heads
+])
+def test_flash_attention_sweep(B, S, Hq, Hkv, D, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = fa_ops.flash_attention(q, k, v, causal=causal)
+    exp = fa_ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_matches_model_chunked_path():
+    """The Pallas kernel and the model's chunked-scan path must agree (they
+    are the two selectable `impl` backends)."""
+    from repro.models.attention import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, D = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    a = fa_ops.flash_attention(q, k, v, causal=True)
+    b = chunked_attention(q, k, v, causal=True, chunk_q=128, chunk_k=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+# -- ssd scan ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,S,h,p,n,chunk", [
+    (1, 128, 4, 32, 16, 32),
+    (2, 256, 8, 64, 32, 64),
+    (1, 256, 8, 64, 128, 128),   # mamba2-2.7b-like state width
+    (2, 64, 2, 32, 16, 64),      # single chunk
+])
+def test_ssd_scan_sweep(b, S, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    x = jax.random.normal(ks[0], (b, S, h, p), dtype)
+    dt = (jax.random.normal(ks[1], (b, S, h), jnp.float32) * 0.5).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = (jax.random.normal(ks[3], (b, S, n)) * 0.3).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, S, n)) * 0.3).astype(dtype)
+    D = jax.random.normal(ks[5], (h,))
+    y_k, st_k = ssd_ops.ssd_scan(x, dt, A, B, C, D, chunk=chunk)
+    y_r, st_r = ssd_ref.ssd_chunked_ref(x, dt, A, B, C, D, chunk)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+def test_ssd_state_equals_stepwise_decode():
+    """Chunked-scan final state == sequential O(1) decode recurrence."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    b, S, h, p, n = 1, 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, S, h, p))
+    dt = jax.random.normal(ks[1], (b, S, h)) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, S, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, S, n)) * 0.3
+    D = jnp.zeros((h,))
+    _, st = ssd_ref.ssd_chunked_ref(x, dt, A, B, C, D, chunk=16)
+    # stepwise recurrence
+    dtv = jax.nn.softplus(dt)
+    st2 = jnp.zeros((b, h, p, n))
+    for t in range(S):
+        dec = jnp.exp(dtv[:, t] * A[None])
+        st2 = st2 * dec[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtv[:, t], x[:, t], B[:, t])
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st2), rtol=1e-4,
+                               atol=1e-4)
+
+
+# -- cachesim step --------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.sampled_from([4, 8, 16]), ways=st.sampled_from([4, 8]),
+       T=st.integers(1, 48), seed=st.integers(0, 99))
+def test_property_lru_kernel_matches_ref(rows, ways, T, seed):
+    rng = np.random.default_rng(seed)
+    tags = np.full((rows, ways), -1, np.int32)
+    age = np.zeros((rows, ways), np.int32)
+    streams = rng.integers(-1, 32, size=(rows, T)).astype(np.int32)
+    t_k, a_k, h_k = sim_ops.simulate_rows(jnp.asarray(tags),
+                                          jnp.asarray(age),
+                                          jnp.asarray(streams))
+    t_r, a_r, h_r = sim_ref.lru_sets_ref(jnp.asarray(tags),
+                                         jnp.asarray(age),
+                                         jnp.asarray(streams))
+    np.testing.assert_array_equal(np.asarray(t_k), np.asarray(t_r))
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+
+
+def test_lru_kernel_matches_core_simulator():
+    """The parallel kernel agrees with the sequential core.cachesim LLC on
+    a single-level workload (directory semantics, no back-invalidation in
+    play: distinct sets, cotenant-only accesses)."""
+    from repro.core import cachesim
+    geom = cachesim.MachineGeometry(
+        n_domains=1, cores_per_domain=1,
+        llc=cachesim.CacheGeometry(n_sets=16, n_ways=4, n_slices=1))
+    state = cachesim.init_machine(geom)
+    rng = np.random.default_rng(7)
+    blocks = (rng.integers(0, 64, size=128) * 16 +
+              rng.integers(0, 16, size=128)).astype(np.int32)
+    state, _ = cachesim.access_stream(
+        state, geom, jnp.asarray(blocks), jnp.zeros(128, jnp.int32),
+        jnp.ones(128, bool))
+    # same accesses through the kernel, partitioned per set
+    tags = np.full((16, 4), -1, np.int32)
+    age = np.zeros((16, 4), np.int32)
+    per_set = [[] for _ in range(16)]
+    for i, b in enumerate(blocks):
+        per_set[b % 16].append((i, b))
+    T = max(len(s) for s in per_set)
+    streams = np.full((16, T), -1, np.int32)
+    clocks = np.zeros((16, T), np.int64)
+    for s, items in enumerate(per_set):
+        for j, (i, b) in enumerate(items):
+            streams[s, j] = b
+    t_k, _, _ = sim_ops.simulate_rows(jnp.asarray(tags), jnp.asarray(age),
+                                      jnp.asarray(streams))
+    kernel_sets = {s: set(int(x) for x in np.asarray(t_k[s]) if x >= 0)
+                   for s in range(16)}
+    core_tags = np.asarray(state["llc"][0][0, 0])  # (sets, ways)
+    core_sets = {s: set(int(x) for x in core_tags[s] if x >= 0)
+                 for s in range(16)}
+    # LRU content per set must match (ages differ: local vs global clock —
+    # LRU *order* within a set is preserved by order-preserving clocks)
+    assert kernel_sets == core_sets
+
+
+# -- cache probe ------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,block", [(512, 512), (1024, 256), (64, 64)])
+def test_triad_kernel(rows, block):
+    a = jnp.arange(rows * 128, dtype=jnp.float32).reshape(rows, 128)
+    b = jnp.ones((rows, 128), jnp.float32) * 2
+    s = jnp.asarray([3.0], jnp.float32)
+    out = triad(a, b, s, block=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(probe_ref.triad_ref(a, b, 3.0)))
+
+
+def test_measure_bandwidth_runs():
+    bw, dt = probe_ops.measure_hbm_bandwidth(n_bytes=3 * (1 << 18), reps=1)
+    assert bw > 0 and dt > 0

@@ -1,0 +1,77 @@
+"""Optimizer, schedule, gradient-compression, and loss-masking tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, grad_compress
+
+
+def test_lr_schedule_shape():
+    cfg = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=10, decay_steps=100)
+    lrs = [float(adamw.lr_at(cfg, jnp.int32(s))) for s in range(0, 120, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[-1] == pytest.approx(1e-4, rel=1e-2)   # lr_min_ratio floor
+    peak_i = int(np.argmax(lrs))
+    assert all(a >= b for a, b in zip(lrs[peak_i:], lrs[peak_i + 1:]))
+
+
+def test_adamw_reduces_quadratic():
+    cfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=1, decay_steps=1000,
+                            weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init_state(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw.apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_grad_clipping():
+    cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=1)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init_state(params)
+    _, _, m = adamw.apply_updates(cfg, params, {"w": jnp.full(4, 100.0)},
+                                  state)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(scale=st.floats(1e-4, 1e3), seed=st.integers(0, 99))
+def test_property_error_feedback_is_lossless_over_time(scale, seed):
+    """Sum of dequantized grads + final residual == sum of true grads."""
+    rng = np.random.default_rng(seed)
+    err = jnp.zeros(32)
+    total_true, total_deq = np.zeros(32), np.zeros(32)
+    for _ in range(6):
+        g = jnp.asarray(rng.standard_normal(32) * scale, jnp.float32)
+        deq, err = grad_compress.compress_tensor(g, err)
+        total_true += np.asarray(g, np.float64)
+        total_deq += np.asarray(deq, np.float64)
+    # residual closes the gap exactly (error feedback invariant)
+    np.testing.assert_allclose(total_deq + np.asarray(err), total_true,
+                               rtol=1e-4, atol=1e-5 * scale)
+
+
+def test_compress_quantization_bound():
+    g = jnp.linspace(-4, 4, 64)
+    deq, err = grad_compress.compress_tensor(g, jnp.zeros(64))
+    step = float(jnp.abs(g).max()) / 127
+    assert float(jnp.abs(err).max()) <= step * 0.51 + 1e-6
+
+
+def test_vocab_pad_mask():
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.models.lm import mask_vocab_pad
+    cfg = get_config("hubert_xlarge")           # vocab 504 -> padded 512
+    assert cfg.vocab_padded == 512
+    logits = jnp.zeros((2, 3, 512))
+    masked = mask_vocab_pad(cfg, logits)
+    assert float(masked[..., 503].max()) == 0.0
+    assert float(masked[..., 504].max()) < -1e29
+    p = jax.nn.softmax(masked, axis=-1)
+    assert float(p[..., 504:].sum()) == pytest.approx(0.0, abs=1e-12)

@@ -1,0 +1,126 @@
+"""Roofline accounting tests: HLO parser exactness + analytic-model
+validation against XLA cost analysis on a loop-free program."""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPE_BY_NAME, get_config
+from repro.launch import roofline as rl
+
+FAKE_HLO = """\
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %p = (s32[], f32[16,128]) parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%gte), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %t = (s32[], f32[16,128]) tuple(%c, %ar)
+}
+
+%cond (p: (s32[], f32[16,128])) -> pred[] {
+  %p = (s32[], f32[16,128]) parameter(0)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[16,128]) -> f32[16,128] {
+  %x = f32[16,128]{1,0} parameter(0)
+  %ag = f32[16,2048]{1,0} all-gather(%x), channel_id=2, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={1}
+  %w = (s32[], f32[16,128]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"24"}}
+  ROOT %out = f32[16,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_collectives_trip_count_multiplication():
+    st = rl.parse_collectives(FAKE_HLO)
+    ar_bytes = 16 * 128 * 4 * 24        # inside while x24
+    ag_bytes = 16 * 2048 * 4            # entry, x1
+    assert st.by_kind["all-reduce"] == ar_bytes
+    assert st.by_kind["all-gather"] == ag_bytes
+    assert st.total_bytes == ar_bytes + ag_bytes
+    assert st.by_group_size[16] == st.total_bytes
+
+
+def test_split_computations_handles_tuple_params():
+    comps = rl.split_computations(FAKE_HLO)
+    assert {"add", "body", "cond", "main"} <= set(comps)
+    assert "all-reduce" in comps["body"]
+    assert "all-reduce" not in comps["main"]
+
+
+def test_model_flops_vs_param_count():
+    for arch in ("qwen2p5_14b", "yi_6b", "mamba2_2p7b"):
+        cfg = get_config(arch)
+        n = rl.count_params(cfg, padded=False)
+        # parameter counts should be in the advertised ballpark
+        expected = {"qwen2p5_14b": 14e9, "yi_6b": 6e9,
+                    "mamba2_2p7b": 2.7e9}[arch]
+        assert 0.7 * expected < n < 1.4 * expected, (arch, n)
+        assert rl.model_flops_per_token(cfg) == pytest.approx(2 * n) or \
+            cfg.family == "moe"
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("qwen2_moe_a2p7b")
+    assert rl.active_params(cfg) < 0.35 * rl.count_params(cfg, padded=False)
+    # A2.7B: ~2.7b active
+    assert 1.8e9 < rl.active_params(cfg) < 4e9
+
+
+def test_roofline_terms_fraction():
+    # compute: 1e12/197e12 = 5.08 ms; memory: 1e9/819e9 = 1.2 ms;
+    # collective: 1e8/50e9 = 2 ms  -> compute-dominant
+    t = rl.roofline_terms(1e12, 1e9, 1e8, model_flops_dev=5e11)
+    assert t["dominant"] == "compute_s"
+    assert t["roofline_fraction"] == pytest.approx(0.5)
+    # collective-dominant case
+    t2 = rl.roofline_terms(1e12, 1e9, 1e10, model_flops_dev=5e11)
+    assert t2["dominant"] == "collective_s"
+    assert t2["roofline_fraction"] < 0.05
+
+
+VALIDATE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import dataclasses, jax
+    from repro.configs.base import get_config, ShapeSpec, input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import roofline as rl
+    from repro.train import train_step as ts
+
+    # depth-1, single-microbatch: while bodies run once, so XLA:CPU
+    # cost_analysis totals are directly comparable to the analytic model.
+    cfg = dataclasses.replace(get_config("qwen1p5_0p5b"), n_layers=1)
+    shape = ShapeSpec("t", 512, 32, "train")
+    hyper = ts.TrainHyper(microbatches=1, remat="none")
+    mesh = make_production_mesh()
+    with mesh:
+        jitted, astate, _, _ = ts.jit_train_step(cfg, mesh, hyper, shape)
+        ab = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in input_specs(cfg, shape).items()}
+        compiled = jitted.lower(astate, ab).compile()
+    hlo_flops = compiled.cost_analysis()["flops"]
+    ana = rl.analytic_costs(cfg, shape, 256, microbatches=1, remat="none")
+    ratio = ana.flops_per_device / hlo_flops
+    print("RATIO", ratio)
+    assert 0.5 < ratio < 2.0, ratio
+    print("VALIDATE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_analytic_flops_vs_cost_analysis_depth1():
+    r = subprocess.run([sys.executable, "-c", VALIDATE_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"})
+    assert "VALIDATE_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
