@@ -212,6 +212,49 @@ def access_stream(state, geom: MachineGeometry, blocks, cores, cotenant):
     return jax.lax.scan(step, state, (blocks, cores, cotenant))
 
 
+# Per-lane rng fork for the batched engine.  Lane 0 keeps the machine rng
+# verbatim so a single-lane batched call is bit-identical to access_stream.
+RNG_LANE_STRIDE = 0x9E3779B1
+
+
+@functools.partial(jax.jit, static_argnames=("geom",))
+def access_streams_batched(state, geom: MachineGeometry, blocks, cores,
+                           cotenant, salt=jnp.uint32(0)):
+    """Batched multi-set Prime+Probe engine: B independent access streams,
+    each run against a snapshot of ``state``, in ONE jitted dispatch.
+
+    ``blocks``: (B, T) int32, -1 padded; ``cores``: (B,) int32 (one issuing
+    core per lane); ``cotenant``: (B,) bool.  Returns latencies (B, T).
+
+    Lane state mutations are NOT committed: the engine implements
+    *measurement* probes.  Under LRU this is exact — an eviction test
+    ``[target, candidates..., target]`` installs the target first, so its
+    outcome depends only on the same-set accesses inside its own lane, never
+    on what other lanes (or earlier tests) left behind; see
+    tests/test_platforms.py for the equivalence property.  Under ``random``
+    replacement each lane forks the machine rng by ``RNG_LANE_STRIDE * lane``
+    (lane 0 with ``salt=0`` keeps the machine rng, so a one-lane batched
+    call is bit-exact vs. the sequential scan path).  ``salt`` re-forks
+    every lane — majority-vote callers pass the vote index so repeated
+    probes of one snapshot draw independent replacement decisions rather
+    than replaying the identical trial.
+    """
+    def lane(rng, blk_row, core, ct):
+        st = dict(state)
+        st["rng"] = rng
+
+        def step(s, b):
+            return _access_one(s, geom, core, b, ct)
+
+        _, lats = jax.lax.scan(step, st, blk_row)
+        return lats
+
+    n_lanes = blocks.shape[0]
+    rngs = (state["rng"] + jnp.uint32(salt) * jnp.uint32(0x7F4A7C15) +
+            jnp.arange(n_lanes, dtype=jnp.uint32) * jnp.uint32(RNG_LANE_STRIDE))
+    return jax.vmap(lane)(rngs, blocks, cores, cotenant)
+
+
 # ---------------------------------------------------------------------------
 # Host-side oracle helpers (ground truth NOT visible to the simulated VM;
 # the analogue of the paper's custom GPA->HPA hypercall used for validation).

@@ -96,15 +96,43 @@ class VCOL:
                                  batch: int = 16) -> np.ndarray:
         """Parallel color filtering (§3.2), batched over pages.
 
-        One fused pass per batch:
+        Per page (one lane / one chunk position):
           [page lines at every filter offset]  (install)
           [all filters' lines]                 (prime — evicts matching lines)
           [page lines again, timed]            (probe)
+
+        With the batched probe engine (``vev.use_batch``, the default) every
+        page becomes one lane of a single fused multi-set Prime+Probe
+        dispatch; the legacy path issues one fused stream per ``batch``
+        pages (the seed Table 4 path).
         """
         pages = np.asarray(pages, np.int64)
         n_colors = cf.n_colors
         out = np.full(len(pages), -1, np.int64)
         filter_lines = np.concatenate([es.gvas for es in cf.filters])
+        if self.vev.use_batch and len(pages):
+            # one lane per `batch`-page chunk (pages in a chunk share the
+            # filter prime, exactly like the seed fused stream); all chunks
+            # ride a single dispatch
+            lanes = []
+            spans = []
+            for s in range(0, len(pages), batch):
+                chunk = pages[s:s + batch]
+                flat = np.array(
+                    [self.vm.gva(int(p), int(off)) for p in chunk
+                     for off in cf.offsets], np.int64)   # (len(chunk)*colors)
+                lanes.append(np.concatenate([flat, filter_lines, flat]))
+                spans.append((s, len(chunk), len(flat)))
+            lat_lanes = self.vm.timed_access_batch(lanes, vcpu=self.vcpu)
+            for (s, n, flen), lats in zip(spans, lat_lanes):
+                probe = lats[flen + len(filter_lines):].reshape(n, n_colors)
+                evicted = probe > L2_MISS_THRESHOLD
+                out[s:s + n] = np.argmax(probe, axis=1)
+                bad = evicted.sum(axis=1) != 1
+                for i in np.nonzero(bad)[0]:
+                    out[s + i] = self.identify_color_sequential(
+                        cf, int(pages[s + i]))
+            return out
         for s in range(0, len(pages), batch):
             chunk = pages[s:s + batch]
             page_lines = np.stack(

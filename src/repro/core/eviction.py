@@ -37,6 +37,26 @@ from repro.core.host_model import GuestVM
 C_POOL_SCALE = 3  # paper §3.1: scaling factor C
 
 
+def _probe_lanes(tests, prime_reps: int) -> List[np.ndarray]:
+    """(target, candidates) -> one Prime+Probe lane per test:
+    ``[target, candidates * prime_reps, target]``."""
+    return [np.concatenate(
+        [[t]] + [np.asarray(c, np.int64)] * prime_reps + [[t]])
+        for t, c in tests]
+
+
+def _majority_verdicts(vm: GuestVM, lanes: List[np.ndarray], vcpu, thr: int,
+                       votes: int) -> np.ndarray:
+    """Fused majority-voted eviction verdicts: one batched dispatch per
+    vote, the vote index salting the per-lane rng fork so each vote is an
+    independent trial under non-deterministic replacement."""
+    hits = np.zeros(len(lanes), np.int64)
+    for vote in range(votes):
+        lats = vm.timed_access_batch(lanes, vcpu=vcpu, salt=vote)
+        hits += np.array([int(l[-1] > thr) for l in lats])
+    return hits * 2 > votes
+
+
 @dataclasses.dataclass
 class EvictionSet:
     """A minimal eviction set: `gvas` all map to one cache set."""
@@ -61,7 +81,7 @@ class VEV:
     """Eviction-set constructor bound to one GuestVM."""
 
     def __init__(self, vm: GuestVM, votes: int = 1, max_backtracks: int = 8,
-                 vcpu: int = 0, prime_reps: int = 1):
+                 vcpu: int = 0, prime_reps: int = 1, use_batch: bool = True):
         self.vm = vm
         self.votes = votes
         self.max_backtracks = max_backtracks
@@ -71,6 +91,11 @@ class VEV:
         # toward 1 (the standard technique L2FBS inherits for unknown
         # replacement policies).  1 suffices for (pseudo-)LRU.
         self.prime_reps = prime_reps
+        # use_batch routes group tests through the batched multi-set
+        # Prime+Probe engine (one fused dispatch per vote for a whole round
+        # of tests); False keeps the per-test sequential path for
+        # benchmarking the dispatch reduction.
+        self.use_batch = use_batch
         self.stats = VEVStats()
 
     # -- thresholds -----------------------------------------------------------
@@ -100,12 +125,75 @@ class VEV:
             hits += int(int(lats[-1]) > thr)
         return hits * 2 > rounds
 
+    def evicts_many(self, tests: Sequence[Tuple[int, Sequence[int]]],
+                    level: str) -> np.ndarray:
+        """Batched eviction tests: each (target, candidates) pair becomes one
+        lane ``[target, candidates*prime_reps, target]`` of a single fused
+        multi-set Prime+Probe dispatch per vote (the engine behind VEV group
+        testing, VCOL filtering and VSCAN probing — paper Tables 2/6).
+        Outcome-equivalent to per-test :meth:`evicts` under LRU (each lane's
+        verdict depends only on its own in-lane accesses)."""
+        if not tests:
+            return np.zeros(0, bool)
+        if not self.use_batch:
+            return np.array([self.evicts(t, c, level) for t, c in tests])
+        self.stats.tests += len(tests) * self.votes
+        return _majority_verdicts(self.vm,
+                                  _probe_lanes(tests, self.prime_reps),
+                                  self.vcpu, self._threshold(level),
+                                  self.votes)
+
     # -- pruning ----------------------------------------------------------------
+    def _prune_rounds(self, target_gva: int, cand_gvas, ways: int,
+                      rng: np.random.Generator):
+        """Round generator behind :meth:`prune` in batched mode.
+
+        Yields one round of (target, keep-list) tests at a time and receives
+        the verdict vector; a driver (``build_for_offset`` directly, or
+        :func:`build_many` merging several partitions) turns each round into
+        one fused multi-set Prime+Probe dispatch.  Each round tests the two
+        drop-a-half splits (L2FBS's binary-search scan — one verdict removes
+        half the candidates while enough congruent lines remain) ahead of
+        the classic ``ways+1`` group removals (Vila et al. backtracking).
+        """
+        s = np.asarray(cand_gvas, np.int64)
+        backtracks = 0
+        self.stats.prunes += 1
+        while len(s) > ways:
+            n_groups = min(ways + 1, len(s))
+            groups: List[np.ndarray] = []
+            if len(s) >= 2 * ways:
+                groups.extend(np.array_split(rng.permutation(len(s)), 2))
+            groups.extend(np.array_split(rng.permutation(len(s)), n_groups))
+            keeps = [np.delete(s, g) for g in groups]
+            verdicts = yield [(target_gva, k) for k in keeps]
+            hit = np.flatnonzero(verdicts)
+            if len(hit):
+                # halves come first, so the largest viable removal wins
+                s = keeps[int(hit[0])]
+            else:
+                backtracks += 1
+                if backtracks > self.max_backtracks:
+                    self.stats.failures += 1
+                    return None
+        # final sanity: the minimal set must still evict the target.
+        verdicts = yield [(target_gva, s)]
+        if not verdicts[0]:
+            self.stats.failures += 1
+            return None
+        return s
+
     def prune(self, target_gva: int, cand_gvas: Sequence[int], ways: int,
               level: str, rng: np.random.Generator) -> Optional[np.ndarray]:
         """Reduce a superset that evicts `target` to a minimal set of `ways`
         lines.  Group testing with backtracking (Vila et al.), scanning
-        groups smallest-first as in L2FBS's binary-search pruning."""
+        groups smallest-first as in L2FBS's binary-search pruning.
+
+        Batched mode drives :meth:`_prune_rounds` (one dispatch per round);
+        sequential mode keeps the seed per-test scan with early exit."""
+        if self.use_batch:
+            return _drive(self._prune_rounds(target_gva, cand_gvas, ways, rng),
+                          lambda tests: self.evicts_many(tests, level))
         s = np.asarray(cand_gvas, np.int64)
         backtracks = 0
         self.stats.prunes += 1
@@ -140,12 +228,52 @@ class VEV:
         pages = self.vm.alloc_pages(n_pages)
         return np.array([self.vm.gva(int(p), offset) for p in pages], np.int64)
 
+    def _build_rounds(self, offset: int, pool, ways: int, level: str,
+                      max_sets: Optional[int], seed: int):
+        """Round generator behind :meth:`build_for_offset` in batched mode:
+        per target, the covered-by-built-set checks and the pool-viability
+        test share one round; pruning rounds follow via
+        :meth:`_prune_rounds`.  Drivers turn each round into one dispatch —
+        :func:`build_many` merges rounds of several partitions (Fig 6)."""
+        rng = np.random.default_rng(seed)
+        pool = list(np.asarray(pool, np.int64))
+        built: List[EvictionSet] = []
+        misses = 0
+        while pool and (max_sets is None or len(built) < max_sets):
+            target = int(pool.pop(0))
+            tests = [(target, es.gvas) for es in built]
+            tests.append((target, np.array(pool, np.int64)))
+            verdicts = yield tests
+            if bool(np.asarray(verdicts[:-1]).any()):   # covered
+                continue
+            if not verdicts[-1]:
+                # pool can no longer evict this target: its set's lines are
+                # exhausted (or it needs more candidates) — skip.
+                misses += 1
+                if misses > 4 * ways:
+                    break
+                continue
+            minimal = yield from self._prune_rounds(
+                target, np.array(pool, np.int64), ways, rng)
+            if minimal is None:
+                continue
+            built.append(EvictionSet(gvas=np.sort(minimal), offset=offset,
+                                     level=level))
+            self.stats.built += 1
+            taken = set(int(x) for x in minimal)
+            pool = [p for p in pool if int(p) not in taken]
+        return built
+
     def build_for_offset(self, offset: int, pool: np.ndarray, ways: int,
                          level: str, max_sets: Optional[int] = None,
                          seed: int = 0) -> List[EvictionSet]:
         """Paper §3.1 "basic steps": repeatedly pick a target from the pool;
         if no previously-built set evicts it, prune the pool remainder into a
         new minimal set and remove its lines from the pool."""
+        if self.use_batch:
+            return _drive(
+                self._build_rounds(offset, pool, ways, level, max_sets, seed),
+                lambda tests: self.evicts_many(tests, level))
         rng = np.random.default_rng(seed)
         pool = list(np.asarray(pool, np.int64))
         built: List[EvictionSet] = []
@@ -195,24 +323,109 @@ class VEV:
             if len(s) < 2:
                 break
             perm = rng.permutation(len(s))
-            for frac in (2,):  # halves
-                for piece in np.array_split(perm, frac):
-                    keep = np.delete(s, piece)
-                    if len(keep) and self.evicts(target, keep, level):
-                        s = keep
-                        changed = True
-                        break
-                if changed:
+            pieces = np.array_split(perm, 2)  # halves
+            keeps = [np.delete(s, piece) for piece in pieces]
+            keeps = [k for k in keeps if len(k)]
+            verdicts = self.evicts_many([(target, k) for k in keeps], level)
+            hit = np.flatnonzero(verdicts)
+            if len(hit):
+                s = keeps[int(hit[0])]
+                changed = True
+        # then one-at-a-time greedy removal to exact minimality; batched mode
+        # tests every single-line removal of the current set in one dispatch
+        # and drops the first line whose removal keeps the set evicting
+        if self.use_batch:
+            while len(s) > 1:
+                keeps = [np.delete(s, i) for i in range(len(s))]
+                verdicts = self.evicts_many([(target, k) for k in keeps],
+                                            level)
+                hit = np.flatnonzero(verdicts)
+                if not len(hit):
                     break
-        # then one-at-a-time greedy removal to exact minimality
-        i = 0
-        while i < len(s):
-            keep = np.delete(s, i)
-            if len(keep) and self.evicts(target, keep, level):
-                s = keep
-            else:
-                i += 1
+                s = keeps[int(hit[0])]
+        else:
+            i = 0
+            while i < len(s):
+                keep = np.delete(s, i)
+                if len(keep) and self.evicts(target, keep, level):
+                    s = keep
+                else:
+                    i += 1
         return len(s) if self.evicts(target, s, level) else None
+
+
+def _drive(gen, test_fn):
+    """Run a round generator to completion with a per-round verdict fn."""
+    try:
+        tests = gen.send(None)
+        while True:
+            tests = gen.send(test_fn(tests))
+    except StopIteration as e:
+        return e.value
+
+
+def build_many(vm: GuestVM, jobs: List[Dict], level: str, ways: int,
+               votes: int = 1, seed: int = 0, use_batch: bool = True,
+               prime_reps: int = 1) -> Tuple[List[List[EvictionSet]],
+                                             List[int], List[int]]:
+    """Merged multi-partition eviction-set construction (Fig 6).
+
+    ``jobs``: dicts with keys ``offset``, ``pool``, optional ``max_sets`` and
+    ``vcpu``.  All partitions advance in lockstep, one fused multi-set
+    Prime+Probe dispatch per round across every partition still running —
+    the batched realization of the paper's parallel construction (partitions
+    are disjoint rows, so their lanes never interfere).
+
+    Returns (per-job built sets, per-job round counts, per-job prune-failure
+    counts).  A job's round count is the number of dispatches it would have
+    cost alone, so ``sum`` models sequential construction cost and ``max``
+    the parallel critical path.
+    """
+    vevs = [VEV(vm, votes=votes, vcpu=int(j.get("vcpu", 0)),
+                prime_reps=prime_reps, use_batch=use_batch) for j in jobs]
+    results: List[Optional[List[EvictionSet]]] = [None] * len(jobs)
+    rounds: List[int] = [0] * len(jobs)
+    if not use_batch:
+        for i, (vev, j) in enumerate(zip(vevs, jobs)):
+            before = vm.stat_passes
+            results[i] = vev.build_for_offset(
+                j["offset"], j["pool"], ways, level,
+                max_sets=j.get("max_sets"), seed=seed + i)
+            rounds[i] = vm.stat_passes - before
+        return ([r or [] for r in results], rounds,
+                [v.stats.failures for v in vevs])
+
+    thr = VEV._threshold(level)
+    gens = {}
+    pending = {}
+    for i, (vev, j) in enumerate(zip(vevs, jobs)):
+        gens[i] = vev._build_rounds(j["offset"], j["pool"], ways, level,
+                                    j.get("max_sets"), seed + i)
+        try:
+            pending[i] = gens[i].send(None)
+        except StopIteration as e:
+            results[i] = e.value
+    while pending:
+        lanes: List[np.ndarray] = []
+        vcpus: List[int] = []
+        spans: Dict[int, Tuple[int, int]] = {}
+        for i, tests in pending.items():
+            rounds[i] += votes   # dispatches this job would issue alone
+            start = len(lanes)
+            lanes.extend(_probe_lanes(tests, prime_reps))
+            vcpus.extend([vevs[i].vcpu] * len(tests))
+            spans[i] = (start, len(lanes))
+        verdicts = _majority_verdicts(vm, lanes, vcpus, thr, votes)
+        nxt = {}
+        for i, (a, b) in spans.items():
+            vevs[i].stats.tests += (b - a) * votes
+            try:
+                nxt[i] = gens[i].send(verdicts[a:b])
+            except StopIteration as e:
+                results[i] = e.value
+        pending = nxt
+    return ([r or [] for r in results], rounds,
+            [v.stats.failures for v in vevs])
 
 
 # -- parallel construction (paper §3.3 / Fig 6) ---------------------------------
@@ -230,7 +443,7 @@ class ParallelBuildResult:
 def build_parallel(vm: GuestVM, partitions: List[Dict], level: str,
                    ways: int, pair_vcpus: List[Tuple[int, int]],
                    vcpu_domain: Dict[int, int], votes: int = 1,
-                   seed: int = 0) -> ParallelBuildResult:
+                   seed: int = 0, use_batch: bool = True) -> ParallelBuildResult:
     """Row-partitioned parallel construction (Fig 6).
 
     `partitions`: list of dicts with keys {"offset": int, "pool": np.ndarray,
@@ -240,27 +453,36 @@ def build_parallel(vm: GuestVM, partitions: List[Dict], level: str,
     L2FBS-without-VTOP behaviour (Table 2 row 3).
     """
     sets: List[EvictionSet] = []
-    per_part_passes: List[int] = []
+    per_part_passes: List[int] = [0] * len(partitions)
     failures = 0
+    jobs: List[Dict] = []
+    job_part_idx: List[int] = []
     for i, part in enumerate(partitions):
         ctor, helper = pair_vcpus[i % len(pair_vcpus)]
         same_domain = vcpu_domain.get(ctor) == vcpu_domain.get(helper)
-        before = vm.stat_passes
         if not same_domain:
             # constructor primes in one domain, helper-assisted probes land in
             # another: every test times out; model as wasted passes + failure.
-            vev = VEV(vm, votes=votes, vcpu=ctor)
+            before = vm.stat_passes
+            vev = VEV(vm, votes=votes, vcpu=ctor, use_batch=use_batch)
             vev.evicts(int(part["pool"][0]), part["pool"][:ways * 2], level)
             failures += 1
-            per_part_passes.append(vm.stat_passes - before)
+            per_part_passes[i] = vm.stat_passes - before
             continue
-        vev = VEV(vm, votes=votes, vcpu=ctor)
-        built = vev.build_for_offset(part["offset"], part["pool"], ways, level,
-                                     max_sets=part.get("max_sets"),
-                                     seed=seed + i)
-        failures += vev.stats.failures
-        sets.extend(built)
-        per_part_passes.append(vm.stat_passes - before)
+        jobs.append({"offset": part["offset"], "pool": part["pool"],
+                     "max_sets": part.get("max_sets"), "vcpu": ctor})
+        job_part_idx.append(i)
+    if jobs:
+        # viable partitions advance in lockstep sharing fused dispatches
+        # (build_many); per-job round counts model each partition's
+        # standalone cost for the Table 2 sequential-vs-critical-path report
+        results, rounds, fails = build_many(vm, jobs, level, ways, votes=votes,
+                                            seed=seed, use_batch=use_batch)
+        for j, (built, r) in enumerate(zip(results, rounds)):
+            i = job_part_idx[j]
+            per_part_passes[i] = r
+            sets.extend(built)
+            failures += fails[j]
     return ParallelBuildResult(
         sets=sets,
         sequential_passes=int(sum(per_part_passes)),

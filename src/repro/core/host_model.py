@@ -33,6 +33,8 @@ from repro.core.cachesim import (BLOCKS_PER_PAGE, LAT_DRAM, MachineGeometry,
                                  PAGE_BITS)
 
 _STREAM_BUCKET = 512  # pad access streams to multiples of this (compile reuse)
+_LANE_BUCKET = 128    # pad batched-probe lanes (T) to multiples of this
+_BATCH_BUCKET = 8     # pad batched-probe batch dim (B) to multiples of this
 
 
 def _pad_to_bucket(arr: np.ndarray, fill) -> np.ndarray:
@@ -43,6 +45,10 @@ def _pad_to_bucket(arr: np.ndarray, fill) -> np.ndarray:
     out = np.full(m, fill, dtype=np.int32)
     out[:n] = arr
     return out
+
+
+def _round_up(n: int, bucket: int) -> int:
+    return max(bucket, ((n + bucket - 1) // bucket) * bucket)
 
 
 @dataclasses.dataclass
@@ -155,6 +161,29 @@ class SimHost:
             jnp.asarray(pt))
         return np.asarray(lats)[:n]
 
+    def _run_streams_batched(self, lanes: Sequence[np.ndarray],
+                             cores: Sequence[int],
+                             salt: int = 0) -> List[np.ndarray]:
+        """Run B independent block-address streams as measurement lanes in a
+        single jitted dispatch (cachesim.access_streams_batched).  Lanes see
+        a snapshot of the current machine state; their mutations are not
+        committed.  Returns per-lane latency arrays trimmed to lane length.
+        """
+        n_lanes = len(lanes)
+        pb_lanes = _round_up(n_lanes, _BATCH_BUCKET)
+        t = _round_up(max((len(l) for l in lanes), default=1), _LANE_BUCKET)
+        blocks = np.full((pb_lanes, t), -1, np.int32)
+        lane_cores = np.zeros(pb_lanes, np.int32)
+        for i, (lane, core) in enumerate(zip(lanes, cores)):
+            blocks[i, :len(lane)] = lane
+            lane_cores[i] = core
+        lats = cachesim.access_streams_batched(
+            self.state, self.geom, jnp.asarray(blocks),
+            jnp.asarray(lane_cores), jnp.zeros(pb_lanes, bool),
+            jnp.uint32(salt))
+        lats = np.asarray(lats)
+        return [lats[i, :len(lane)] for i, lane in enumerate(lanes)]
+
 
 class GuestVM:
     """The VM-visible interface.  Everything the probing stack may use."""
@@ -178,6 +207,11 @@ class GuestVM:
         # work: total simulated accesses and batched passes issued)
         self.stat_accesses = 0
         self.stat_passes = 0
+        # batched probes never commit machine state (so the machine rng
+        # never advances); this per-call counter re-forks the lane rngs so
+        # successive measurement dispatches draw independent replacement
+        # decisions, like committed sequential probes would
+        self._probe_seq = 0
 
     # -- guest memory management ----------------------------------------------
     def alloc_pages(self, n: int) -> np.ndarray:
@@ -236,6 +270,44 @@ class GuestVM:
                 lats[i] += self.timer_noise_lat
             self._timer_warm = min(self.timer_warm_reads, self._timer_warm + 1)
         return lats
+
+    def timed_access_batch(self, gva_lists: Sequence[np.ndarray],
+                           vcpu=0, salt: int = 0) -> List[np.ndarray]:
+        """Batched multi-set Prime+Probe: B independent timed streams in ONE
+        fused dispatch.  ``vcpu`` is a single vcpu id or one per lane;
+        ``salt`` re-forks the per-lane rng (vote index for majority voting
+        under non-deterministic replacement).
+
+        Lanes run against a snapshot of the machine state and are not
+        committed — this is a measurement primitive (VEV group tests, VCOL
+        parallel filtering, VSCAN probe phases all route through it); the
+        caller re-primes real state where occupancy matters.  Guest-TSC
+        noise applies per lane from the current warm level (each lane's MLP
+        traversal then keeps its own timer warm, as in the fused sequential
+        path).
+        """
+        lanes = [np.atleast_1d(np.asarray(g, np.int64)) for g in gva_lists]
+        if not lanes:
+            return []
+        vcpus = [vcpu] * len(lanes) if np.isscalar(vcpu) else list(vcpu)
+        blocks = [self._hpa_block(lane) for lane in lanes]
+        cores = [self.vcpu_cores[v] for v in vcpus]
+        self.stat_accesses += sum(len(b) for b in blocks)
+        self.stat_passes += 1
+        self._probe_seq += 1
+        eff_salt = (salt * 65537 + self._probe_seq) & 0xFFFFFFFF
+        out = [l.astype(np.int64)
+               for l in self.host._run_streams_batched(blocks, cores,
+                                                       salt=eff_salt)]
+        warm0 = self._timer_warm
+        for lats in out:
+            warm = warm0
+            for i in range(min(len(lats), self.timer_warm_reads - warm0)):
+                if warm < self.timer_warm_reads and self.rng.random() < 0.35:
+                    lats[i] += self.timer_noise_lat
+                warm += 1
+        self._timer_warm = self.timer_warm_reads
+        return out
 
     def warm_timer(self) -> None:
         """Dummy RDTSC reads before a measurement (the paper's §3.1 fix)."""

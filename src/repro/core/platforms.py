@@ -1,0 +1,239 @@
+"""CachePlatform — the cloud-provisioning scenario matrix (paper §2/§6).
+
+The paper's central claim is that CacheX works *without knowing* how the
+cloud provisioned the VM's caches: the LLC may be dedicated, way-partitioned
+with Intel CAT, slice-partitioned, or shared with noisy co-tenants, on CPUs
+with different geometries and hidden slice hashes.  This module makes that
+scenario space first-class: a :class:`CachePlatform` bundles
+
+  * the cache **geometry** the guest actually lands on (per-core L2, LLC
+    sets/ways/slices, LLC-domain topology),
+  * the **replacement policy** (``lru`` | ``random``),
+  * the hypervisor **provisioning** mode — ``dedicated`` (whole LLC),
+    ``cat`` (way-partitioned: the guest's effective associativity shrinks to
+    its allocation, paper Table 3), ``slice`` (a subset of slices), or
+    ``shared`` (full LLC plus co-tenant noise described by
+    :class:`NoiseSpec`s),
+  * probing parameters that depend on the platform only through quantities
+    the VM can *discover* (votes / prime repetitions for non-LRU policies).
+
+Geometries are the scaled, structurally-faithful sizes used across
+tests/benchmarks (a 256-set L2 keeps 4 page colors; see tests/conftest.py);
+``*_ways_total`` records the unscaled hardware intent for reporting.
+
+All registry entries are consumed by :func:`repro.core.runner.run_cachex`,
+the platform-parametrized tests (tests/test_platforms.py), and the
+per-platform benchmark (`benchmarks/bench_paper_tables.py`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.cachesim import BLOCKS_PER_PAGE, CacheGeometry, MachineGeometry
+from repro.core.host_model import (CotenantWorkload, GuestVM, SimHost,
+                                   polluter_gen, zipf_gen)
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSpec:
+    """A co-tenant VM's traffic, resolved lazily to a CotenantWorkload."""
+
+    name: str
+    domain: int
+    rate_per_ms: float
+    kind: str = "polluter"        # "polluter" | "zipf"
+    region_pages: int = 2048
+    base_page: int = 1 << 18
+
+    def workload(self) -> CotenantWorkload:
+        if self.kind == "polluter":
+            gen = polluter_gen(region_pages=self.region_pages,
+                               base_page=self.base_page)
+        elif self.kind == "zipf":
+            gen = zipf_gen(base_page=self.base_page,
+                           region_pages=self.region_pages)
+        else:
+            raise ValueError(self.kind)
+        return CotenantWorkload(self.name, self.domain, self.rate_per_ms, gen)
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlatform:
+    """One provisioned-cache scenario a cloud VM may land on."""
+
+    name: str
+    description: str
+    l2: CacheGeometry
+    llc: CacheGeometry            # guest-*effective* LLC geometry
+    provisioning: str = "dedicated"   # dedicated | cat | slice | shared
+    llc_ways_total: int = 0       # hardware ways (== llc.n_ways unless cat)
+    llc_slices_total: int = 0     # hardware slices (== llc.n_slices unless slice)
+    n_domains: int = 1
+    cores_per_domain: int = 2
+    replacement: str = "lru"
+    slice_seed: int = 0x9E3779B9
+    noise: Tuple[NoiseSpec, ...] = ()
+    # probing parameters the VM would pick after discovering the policy:
+    votes: int = 1
+    prime_reps: int = 1
+
+    def __post_init__(self):
+        if self.llc_ways_total == 0:
+            object.__setattr__(self, "llc_ways_total", self.llc.n_ways)
+        if self.llc_slices_total == 0:
+            object.__setattr__(self, "llc_slices_total", self.llc.n_slices)
+
+    # -- derived discovery targets (ground truth for tests/driver) ----------
+    @property
+    def n_l2_colors(self) -> int:
+        """Page colors in the L2 (HPA bits above the page offset that index
+        L2 sets): n_sets / blocks-per-page."""
+        return max(1, self.l2.n_sets // BLOCKS_PER_PAGE)
+
+    @property
+    def n_llc_rows_per_offset(self) -> int:
+        """Distinct LLC set indices reachable at one aligned page offset."""
+        return max(1, self.llc.n_sets // BLOCKS_PER_PAGE)
+
+    @property
+    def effective_ways(self) -> int:
+        """What VEV should detect as the minimal eviction-set size (paper
+        Table 3: equals the CAT allocation under way-partitioning)."""
+        return self.llc.n_ways
+
+    @property
+    def l2_filter_reliable(self) -> bool:
+        """Whether L2 color filtering is noise-free on this scenario.
+
+        The simulator conflates the LLC entry with the snoop-filter
+        directory entry (see cachesim).  When the guest-effective LLC
+        associativity drops below the L2's (a small CAT allocation),
+        directory evictions back-invalidate L2 lines mid-filter and L2
+        eviction tests acquire systematic false positives.  Real Skylake
+        CAT partitions only *data* ways — the directory keeps full
+        associativity — so hardware L2 filtering is unaffected; the flag
+        marks where our abstraction diverges (documented in README)."""
+        return self.llc.n_ways >= self.l2.n_ways
+
+    def machine(self) -> MachineGeometry:
+        return MachineGeometry(
+            n_domains=self.n_domains, cores_per_domain=self.cores_per_domain,
+            l2=self.l2, llc=self.llc, replacement=self.replacement,
+            slice_seed=self.slice_seed)
+
+    def make_host_vm(self, seed: int = 0, n_guest_pages: int = 1 << 13,
+                     mapping: str = "fragmented",
+                     n_host_pages: int = 1 << 14,
+                     with_noise: bool = True) -> Tuple[SimHost, GuestVM]:
+        """Boot the scenario: host machine + one probing guest, with the
+        platform's co-tenants attached (``with_noise=False`` boots the same
+        hardware quiesced, e.g. for accuracy baselines)."""
+        host = SimHost(self.machine(), n_host_pages=n_host_pages, seed=seed)
+        if with_noise:
+            for spec in self.noise:
+                host.add_cotenant(spec.workload())
+        vm = GuestVM(host, n_guest_pages=n_guest_pages, mapping=mapping,
+                     vcpu_cores=list(range(self.machine().n_cores)),
+                     seed=seed)
+        return host, vm
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, CachePlatform] = {}
+
+
+def register_platform(platform: CachePlatform) -> CachePlatform:
+    if platform.name in _REGISTRY:
+        raise ValueError(f"platform {platform.name!r} already registered")
+    _REGISTRY[platform.name] = platform
+    return platform
+
+
+def get_platform(name: str) -> CachePlatform:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown platform {name!r}; have {sorted(_REGISTRY)}")
+
+
+def list_platforms() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def all_platforms() -> List[CachePlatform]:
+    return [_REGISTRY[n] for n in list_platforms()]
+
+
+# -- built-in scenario matrix -------------------------------------------------
+
+SMALL_L2 = CacheGeometry(n_sets=256, n_ways=8)
+
+# The paper's evaluation platform (Table 1), scaled: sliced + shared LLC,
+# whole LLC dedicated to the guest's domain.
+SKYLAKE_SP = register_platform(CachePlatform(
+    name="skylake_sp",
+    description="Skylake-SP-like: sliced non-inclusive LLC, dedicated",
+    l2=SMALL_L2,
+    llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=2),
+))
+
+# Ice-Lake-SP-like: fewer, bigger slices modelled as a single non-sliced
+# LLC domain with higher associativity (12-way in hardware).
+ICELAKE_SP = register_platform(CachePlatform(
+    name="icelake_sp",
+    description="Ice-Lake-SP-like: non-sliced 12-way LLC, dedicated",
+    l2=SMALL_L2,
+    llc=CacheGeometry(n_sets=256, n_ways=12, n_slices=1),
+))
+
+# Milan-like: small CCX LLC domains (several per socket), non-sliced,
+# 16-way; VMs see multiple small LLC domains instead of one big one.
+MILAN_CCX = register_platform(CachePlatform(
+    name="milan_ccx",
+    description="Milan-like: two 16-way CCX LLC domains, dedicated",
+    l2=SMALL_L2,
+    llc=CacheGeometry(n_sets=128, n_ways=16, n_slices=1),
+    n_domains=2,
+))
+
+# CAT way-partitioned Skylake: the hypervisor allocates 4 of 8 ways to this
+# VM — effective associativity (and thus minimal eviction sets) shrinks to
+# the allocation, which VEV must *discover* (paper Table 3).
+SKYLAKE_CAT = register_platform(CachePlatform(
+    name="skylake_cat",
+    description="Skylake-SP with CAT: guest allocated 4 of 8 LLC ways",
+    l2=SMALL_L2,
+    llc=CacheGeometry(n_sets=512, n_ways=4, n_slices=2),
+    provisioning="cat",
+    llc_ways_total=8,
+))
+
+# Slice-partitioned: the guest's pages only ever land in one of the two
+# slices (harvested-LLC-style provisioning); slice bits stop mattering.
+SKYLAKE_SLICEPART = register_platform(CachePlatform(
+    name="skylake_slicepart",
+    description="Skylake-SP slice-partitioned: guest confined to 1 of 2 slices",
+    l2=SMALL_L2,
+    llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=1),
+    provisioning="slice",
+    llc_slices_total=2,
+))
+
+# Co-tenant-shared Skylake: full geometry, but noisy neighbours keep the
+# LLC under moderate pressure in domain 0 (the paper's public-cloud case;
+# probing must survive the noise via majority voting).
+SKYLAKE_SHARED = register_platform(CachePlatform(
+    name="skylake_shared",
+    description="Skylake-SP shared with a moderate co-tenant polluter",
+    l2=SMALL_L2,
+    llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=2),
+    provisioning="shared",
+    noise=(NoiseSpec("steady_polluter", domain=0, rate_per_ms=30.0,
+                     region_pages=1024),),
+    votes=3,
+))

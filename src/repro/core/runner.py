@@ -1,0 +1,179 @@
+"""run_cachex — end-to-end CacheX pipeline against any registered platform.
+
+One call executes the full paper pipeline — VEV (eviction sets +
+associativity detection), VCOL (virtual colors), VSCAN (windowed
+Prime+Probe monitoring), CAS (contention tiers) and CAP (colored page-cache
+allocation) — against a :class:`repro.core.platforms.CachePlatform`, and
+reports per-scenario success metrics.  The point (paper §1) is that the
+*same guest-side code* succeeds across the whole provisioning matrix
+without being told which scenario it landed on; the report quantifies that
+per platform.
+
+Success metrics mirror the paper's validation methodology (§6.2): the
+guest-side results are checked against host ground truth through the
+validation hypercalls only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.cap import CapAllocator
+from repro.core.cas import TierTracker
+from repro.core.color import VCOL, color_accuracy
+from repro.core.eviction import VEV, build_many
+from repro.core.host_model import CotenantWorkload, polluter_gen
+from repro.core.platforms import CachePlatform, get_platform
+from repro.core.vscan import VScan
+
+
+@dataclasses.dataclass
+class CacheXReport:
+    platform: str
+    provisioning: str
+    # VEV
+    vev_target_sets: int
+    vev_built_sets: int
+    vev_verified_sets: int        # hypercall-validated: one (set,slice), full
+    vev_success_rate: float       # verified / target (Table 2's success %)
+    detected_ways: Optional[int]  # Table 3 (== CAT allocation when cat)
+    # VCOL
+    n_colors: int
+    vcol_accuracy: float          # Table 4 / §6.2 (1.0 == paper's "100%")
+    # VSCAN
+    vscan_sets: int
+    vscan_idle_rate: float        # %-lines/ms, quiesced
+    vscan_contended_rate: float   # %-lines/ms, under contention
+    # CAS / CAP
+    cas_tiers: Dict[int, int]     # committed per-domain tier after contention
+    cap_allocated: int
+    cap_rollovers: int
+    # cost accounting
+    dispatches: int               # jitted probe dispatches issued
+    accesses: int                 # simulated memory accesses issued
+    wall_s: float
+
+    def row(self) -> str:
+        """One CSV-ish summary row (benchmark harness contract)."""
+        return (f"{self.platform},{self.provisioning},"
+                f"vev={100 * self.vev_success_rate:.0f}%,"
+                f"ways={self.detected_ways},"
+                f"vcol={100 * self.vcol_accuracy:.0f}%,"
+                f"vscan_idle={self.vscan_idle_rate:.2f},"
+                f"vscan_hot={self.vscan_contended_rate:.2f},"
+                f"dispatches={self.dispatches},wall={self.wall_s:.2f}s")
+
+
+def _verify_llc_set(vm, es) -> bool:
+    """Hypercall validation: all lines congruent in one (set, slice)."""
+    keys = {vm.hypercall_llc_setslice(int(g)) for g in es.gvas}
+    return len(keys) == 1
+
+
+def run_cachex(platform: Union[str, CachePlatform], seed: int = 0,
+               use_batch: bool = True,
+               monitor_intervals: int = 3) -> CacheXReport:
+    """Execute VEV -> VCOL -> VSCAN -> CAS/CAP against one scenario."""
+    plat = get_platform(platform) if isinstance(platform, str) else platform
+    host, vm = plat.make_host_vm(seed=seed)
+    t0 = time.perf_counter()
+
+    # ---- VCOL: color filters + virtual-color accuracy (§3.2) --------------
+    vcol = VCOL(vm, vev=VEV(vm, votes=plat.votes, prime_reps=plat.prime_reps,
+                            use_batch=use_batch))
+    cf = vcol.build_color_filters(n_colors=plat.n_l2_colors,
+                                  ways=plat.l2.n_ways, seed=seed)
+    check_pages = vm.alloc_pages(16 * max(1, cf.n_colors))
+    colors = vcol.identify_colors_parallel(cf, check_pages)
+    vcol_acc = (color_accuracy(vm, check_pages, colors, plat.n_l2_colors)
+                if cf.n_colors else 0.0)
+
+    # ---- VEV: minimal LLC eviction sets + associativity (§3.1) ------------
+    vev = VEV(vm, votes=plat.votes, prime_reps=plat.prime_reps,
+              use_batch=use_batch)
+    ways = plat.effective_ways
+    target_sets = min(4, plat.n_llc_rows_per_offset * plat.llc.n_slices)
+    pool = vev.make_pool(0, ways=ways,
+                         n_uncontrollable_rows=plat.n_llc_rows_per_offset,
+                         n_slices=plat.llc.n_slices)
+    results, _, _ = build_many(
+        vm, [{"offset": 0, "pool": pool, "max_sets": target_sets}],
+        "llc", ways, votes=plat.votes, seed=seed, use_batch=use_batch,
+        prime_reps=plat.prime_reps)
+    built = results[0]
+    verified = [es for es in built
+                if len(es) == ways and _verify_llc_set(vm, es)]
+
+    assoc_pool = vev.make_pool(64, ways=ways,
+                               n_uncontrollable_rows=plat.n_llc_rows_per_offset,
+                               n_slices=plat.llc.n_slices)
+    detected = vev.probe_associativity(assoc_pool, "llc", seed=seed)
+
+    # ---- VSCAN: windowed Prime+Probe monitoring (§3.3) --------------------
+    domain_vcpus = {d: [d * plat.cores_per_domain]
+                    for d in range(plat.n_domains)}
+    vs_pool = vm.alloc_pages(
+        min(ways * plat.n_llc_rows_per_offset * plat.llc.n_slices * 3, 384))
+    vs, _ = VScan.build(vm, cf, vcol, vs_pool, ways=ways, f=2, offsets=[0],
+                        domain_vcpus=domain_vcpus, votes=plat.votes,
+                        prime_reps=plat.prime_reps,
+                        seed=seed, use_batch=use_batch)
+    for wl in host.cotenants:        # quiesce for the idle baseline
+        wl.enabled = False
+    idle = np.mean([vs.monitor_once().rate.mean()
+                    for _ in range(monitor_intervals)])
+    for wl in host.cotenants:        # platform noise back on, plus a burst
+        wl.enabled = True
+    burst = CotenantWorkload("runner_burst", 0, 150.0,
+                             polluter_gen(region_pages=2048))
+    host.add_cotenant(burst)
+    contended = np.mean([vs.monitor_once().rate.mean()
+                         for _ in range(monitor_intervals)])
+
+    # ---- CAS: per-domain contention tiers (§4.1) --------------------------
+    tt = TierTracker(keys=list(domain_vcpus), thresholds=[0.5, 4.0])
+    for _ in range(3):
+        vs.monitor_once()
+        tt.update(vs.per_domain_rate())
+    burst.enabled = False
+
+    # ---- CAP: colored page-cache allocation (§4.2) ------------------------
+    free_pages = vm.alloc_pages(32 * max(1, cf.n_colors))
+    cap = CapAllocator(vcol.build_free_lists(cf, free_pages))
+    cap.update_contention(vs.per_color_rate() or
+                          {c: 0.0 for c in range(cf.n_colors)})
+    allocated = sum(cap.allocate() is not None
+                    for _ in range(16 * max(1, cf.n_colors)))
+
+    return CacheXReport(
+        platform=plat.name,
+        provisioning=plat.provisioning,
+        vev_target_sets=target_sets,
+        vev_built_sets=len(built),
+        vev_verified_sets=len(verified),
+        vev_success_rate=len(verified) / max(1, target_sets),
+        detected_ways=detected,
+        n_colors=cf.n_colors,
+        vcol_accuracy=vcol_acc,
+        vscan_sets=len(vs.monitored),
+        vscan_idle_rate=float(idle),
+        vscan_contended_rate=float(contended),
+        cas_tiers=dict(tt.tier),
+        cap_allocated=int(allocated),
+        cap_rollovers=cap.stats.color_rollovers,
+        dispatches=vm.stat_passes,
+        accesses=vm.stat_accesses,
+        wall_s=time.perf_counter() - t0,
+    )
+
+
+def run_matrix(platforms: Optional[List[str]] = None, seed: int = 0,
+               use_batch: bool = True) -> List[CacheXReport]:
+    """run_cachex across the whole registry (or a named subset)."""
+    from repro.core.platforms import list_platforms
+    names = platforms if platforms is not None else list_platforms()
+    return [run_cachex(n, seed=seed, use_batch=use_batch) for n in names]

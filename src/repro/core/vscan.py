@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core.cachesim import LLC_MISS_THRESHOLD
 from repro.core.color import ColorFilters, VCOL
-from repro.core.eviction import VEV, EvictionSet
+from repro.core.eviction import VEV, EvictionSet, build_many
 from repro.core.host_model import GuestVM
 
 DEFAULT_WINDOW_MS = 7.0
@@ -77,13 +77,18 @@ class VScan:
 
     def __init__(self, vm: GuestVM, monitored: List[MonitoredSet],
                  window_ms: float = DEFAULT_WINDOW_MS,
-                 ewma_alpha: float = 0.3, n_pairs: int = 1):
+                 ewma_alpha: float = 0.3, n_pairs: int = 1,
+                 use_batch: bool = True):
         self.vm = vm
         self.monitored = monitored
         self.window_ms = window_ms
         self.default_window_ms = window_ms
         self.ewma_alpha = ewma_alpha
         self.n_pairs = max(1, n_pairs)
+        # use_batch probes every monitored set as one lane of a single fused
+        # multi-set Prime+Probe dispatch (Table 6); False keeps the seed
+        # one-dispatch-per-set probe loop for benchmarking.
+        self.use_batch = use_batch
         self.ewma = np.zeros(len(monitored))
         self.history: List[VScanSnapshot] = []
 
@@ -94,15 +99,18 @@ class VScan:
               offsets: Sequence[int], domain_vcpus: Dict[int, List[int]],
               votes: int = 1, seed: int = 0,
               window_ms: float = DEFAULT_WINDOW_MS,
-              ewma_alpha: float = 0.3) -> Tuple["VScan", Dict]:
+              ewma_alpha: float = 0.3,
+              use_batch: bool = True,
+              prime_reps: int = 1) -> Tuple["VScan", Dict]:
         """Split pool into color groups, partition by offset, build f sets
         per partition per domain.  Returns (vscan, build_info)."""
         colors = vcol.identify_colors_parallel(cf, pool_pages)
         monitored: List[MonitoredSet] = []
         info = {"partitions": 0, "built": 0, "failed_partitions": 0}
         rng = np.random.default_rng(seed)
+        jobs = []
+        job_meta = []
         for domain, vcpus in domain_vcpus.items():
-            vev = VEV(vm, votes=votes, vcpu=vcpus[0])
             for color in range(cf.n_colors):
                 cpages = pool_pages[colors == color]
                 if len(cpages) == 0:
@@ -112,17 +120,23 @@ class VScan:
                     pool = np.array([vm.gva(int(p), int(off)) for p in cpages],
                                     np.int64)
                     rng.shuffle(pool)
-                    sets = vev.build_for_offset(int(off), pool, ways=ways,
-                                                level="llc", max_sets=f,
-                                                seed=seed + color)
-                    if not sets:
-                        info["failed_partitions"] += 1
-                    for es in sets:
-                        monitored.append(MonitoredSet(
-                            es=es, color=color, domain=domain, vcpu=vcpus[0]))
-                        info["built"] += 1
+                    jobs.append({"offset": int(off), "pool": pool,
+                                 "max_sets": f, "vcpu": vcpus[0]})
+                    job_meta.append((domain, vcpus[0], color))
+        # all (domain, color, offset) partitions advance in lockstep sharing
+        # fused dispatches (Fig 6 parallel construction)
+        results, _, _ = build_many(vm, jobs, "llc", ways, votes=votes,
+                                   seed=seed, use_batch=use_batch,
+                                   prime_reps=prime_reps)
+        for (domain, vcpu, color), sets in zip(job_meta, results):
+            if not sets:
+                info["failed_partitions"] += 1
+            for es in sets:
+                monitored.append(MonitoredSet(
+                    es=es, color=color, domain=domain, vcpu=vcpu))
+                info["built"] += 1
         return cls(vm, monitored, window_ms=window_ms,
-                   ewma_alpha=ewma_alpha), info
+                   ewma_alpha=ewma_alpha, use_batch=use_batch), info
 
     # -- associativity ---------------------------------------------------------
     def associativity(self) -> float:
@@ -144,12 +158,23 @@ class VScan:
         self.vm.wait_ms(self.window_ms)
 
         frac = np.zeros(len(self.monitored))
-        for vcpu, idxs in by_prober.items():
-            for i in idxs:
-                gvas = self.monitored[i].es.gvas[::-1]      # reverse order
-                self.vm.warm_timer()
-                lats = self.vm.timed_access(gvas, vcpu=vcpu)
+        if self.use_batch and self.monitored:
+            # one fused dispatch probes every monitored set (its own lane,
+            # reverse order, issued from its prober's core)
+            order = [i for idxs in by_prober.values() for i in idxs]
+            lanes = [self.monitored[i].es.gvas[::-1] for i in order]
+            vcpus = [self.monitored[i].vcpu for i in order]
+            self.vm.warm_timer()
+            lat_lanes = self.vm.timed_access_batch(lanes, vcpu=vcpus)
+            for i, lats in zip(order, lat_lanes):
                 frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
+        else:
+            for vcpu, idxs in by_prober.items():
+                for i in idxs:
+                    gvas = self.monitored[i].es.gvas[::-1]  # reverse order
+                    self.vm.warm_timer()
+                    lats = self.vm.timed_access(gvas, vcpu=vcpu)
+                    frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
 
         rate = 100.0 * frac / max(self.window_ms, 1e-9)     # % lines / ms
         self.ewma = (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * rate

@@ -1,0 +1,9 @@
+"""Small cross-version Pallas-TPU shims shared by the kernel wrappers."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -1,0 +1,38 @@
+"""Shared vectorized LRU-touch row update for the cache kernels.
+
+Both `cachesim_step` (full per-set simulation) and `cache_probe`
+(Prime+Probe verdicts) apply the same predicated access to a block of
+independent cache-set rows; keeping the hit/empty/LRU-victim selection in
+one place keeps the kernels bit-identical by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def lru_touch(tags, age, blk, clk):
+    """One predicated access across a block of rows.
+
+    tags/age: (R, W) int32 (-1 marks an empty way); blk: (R,) int32 block
+    per row (-1 = no-op); clk: int32 timestamp written to the touched way.
+    Returns (tags, age, hit) with hit: (R,) bool (False for no-ops).
+    """
+    R, W = tags.shape
+    valid = blk >= 0
+    hit_mask = tags == blk[:, None]             # (R, W)
+    hit = jnp.any(hit_mask, axis=1) & valid
+    empty = tags == -1
+    has_empty = jnp.any(empty, axis=1)
+    lru = jnp.argmin(jnp.where(empty, INT_MAX, age), axis=1)
+    victim = jnp.where(has_empty, jnp.argmax(empty, axis=1), lru)
+    way = jnp.where(hit, jnp.argmax(hit_mask, axis=1), victim)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (R, W), 1)
+              == way[:, None])
+    write = onehot & valid[:, None]
+    tags = jnp.where(write, blk[:, None], tags)
+    age = jnp.where(write, clk, age)
+    return tags, age, hit

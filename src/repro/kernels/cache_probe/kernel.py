@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+from repro.kernels._lru import lru_touch
+
 
 def _triad_kernel(a_ref, b_ref, s_ref, o_ref):
     o_ref[...] = a_ref[...] * s_ref[0] + b_ref[...]
@@ -41,7 +44,62 @@ def triad(a, b, scale, *, block: int = 512, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((block, 128), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(a, b, scale)
+
+
+def _prime_probe_kernel(tags_ref, age_ref, stream_ref, target_ref,
+                        evicted_ref, *, T: int, clock0: int):
+    """Batched multi-set Prime+Probe verdicts over a block of lanes.
+
+    Each lane is one independent LRU cache set.  Install the target (MRU),
+    apply the lane's prime stream, then probe: the verdict is whether the
+    target was conflict-evicted.  Fully vectorized across the lane block —
+    the accelerator-native core of VEV's `evicts_many` group testing, for
+    the common single-level case where lanes are pre-resolved to sets.
+    """
+    tags = tags_ref[...]          # (B, W)
+    age = age_ref[...]            # (B, W)
+    target = target_ref[...]      # (B, 1)
+
+    # prime phase 0: install the target at MRU
+    tags, age, _ = lru_touch(tags, age, target[:, 0], clock0)
+
+    def body(t, carry):
+        tags, age = carry
+        tags, age, _ = lru_touch(tags, age, stream_ref[:, t], clock0 + 1 + t)
+        return tags, age
+
+    tags, age = jax.lax.fori_loop(0, T, body, (tags, age))
+    # probe: evicted iff the target no longer has a resident way
+    evicted_ref[:, 0] = ~jnp.any(tags == target, axis=1)
+
+
+def prime_probe(tags, age, streams, targets, *, block_lanes: int = 256,
+                clock0: int = 1, interpret: bool = False):
+    """tags/age: (B, W) int32; streams: (B, T) -1-padded prime accesses;
+    targets: (B,) int32.  Returns evicted verdicts (B,) bool."""
+    B, W = tags.shape
+    T = streams.shape[1]
+    block_lanes = min(block_lanes, B)
+    assert B % block_lanes == 0
+
+    kernel = functools.partial(_prime_probe_kernel, T=T, clock0=clock0)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B // block_lanes,),
+        in_specs=[
+            pl.BlockSpec((block_lanes, W), lambda b: (b, 0)),
+            pl.BlockSpec((block_lanes, W), lambda b: (b, 0)),
+            pl.BlockSpec((block_lanes, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_lanes, 1), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_lanes, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.bool_),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(tags, age, streams, targets[:, None])
+    return out[:, 0]

@@ -1,4 +1,4 @@
-"""Jit'd wrapper + bandwidth measurement for the HBM streaming probe."""
+"""Jit'd wrappers: HBM streaming probe + batched Prime+Probe verdicts."""
 
 from __future__ import annotations
 
@@ -9,7 +9,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cache_probe.kernel import triad
+from repro.kernels.cache_probe.kernel import prime_probe, triad
 
 
 def _on_tpu() -> bool:
@@ -19,6 +19,25 @@ def _on_tpu() -> bool:
 @jax.jit
 def probe_triad(a, b, scale):
     return triad(a, b, scale, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("clock0",))
+def probe_verdicts(tags, age, streams, targets, clock0: int = 1):
+    """Batched multi-set Prime+Probe eviction verdicts (one fused call).
+
+    The accelerator-native fast path for B simultaneous single-set eviction
+    tests; swept against `ref.prime_probe_ref` in tests/test_kernels.py and
+    against the full machine simulator's batched engine (which adds slices,
+    the L2 layer and back-invalidation) in tests/test_platforms.py.
+    """
+    lanes = tags.shape[0]
+    block = lanes
+    for b in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if lanes % b == 0 and b <= lanes:
+            block = b
+            break
+    return prime_probe(tags, age, streams, targets, block_lanes=block,
+                       clock0=clock0, interpret=not _on_tpu())
 
 
 def measure_hbm_bandwidth(n_bytes: int = 256 * (1 << 20),

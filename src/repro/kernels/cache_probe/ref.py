@@ -1,10 +1,46 @@
-"""Pure-jnp oracle for the HBM streaming-probe kernel: STREAM-triad."""
+"""Pure-jnp oracles for the cache-probe kernels: STREAM-triad + the batched
+multi-set Prime+Probe verdict."""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
 
 
 def triad_ref(a, b, scale):
     """out = a * scale + b; the canonical bandwidth-bound op (3 streams)."""
     return a * scale + b
+
+
+def prime_probe_ref(tags, age, streams, targets, clock0: int = 1):
+    """Per-lane Prime+Probe over independent LRU sets.
+
+    tags/age: (B, W) int32 set states (-1 empty); streams: (B, T) int32
+    prime accesses, -1 padded; targets: (B,) int32.  Each lane accesses its
+    target (install, MRU), applies its prime stream, then probes the target:
+    ``evicted[b]`` is True iff the target is no longer resident — the
+    single-set oracle for the batched eviction test (VEV's `evicts_many`).
+    """
+
+    def lane(tag_row, age_row, stream, target):
+        def access(carry, blk):
+            t, a, clk = carry
+            valid = blk >= 0
+            hit_mask = t == blk
+            hit = jnp.any(hit_mask)
+            empty = t == -1
+            has_empty = jnp.any(empty)
+            lru = jnp.argmin(jnp.where(empty, INT_MAX, a))
+            victim = jnp.where(has_empty, jnp.argmax(empty), lru)
+            way = jnp.where(hit, jnp.argmax(hit_mask), victim)
+            nt = jnp.where(valid, t.at[way].set(blk), t)
+            na = jnp.where(valid, a.at[way].set(clk), a)
+            return (nt, na, clk + 1), None
+
+        carry, _ = access((tag_row, age_row, jnp.int32(clock0)), target)
+        (t, a, _), _ = jax.lax.scan(access, carry, stream)
+        return ~jnp.any(t == target)
+
+    return jax.vmap(lane)(tags, age, streams, targets)

@@ -20,32 +20,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-INT_MAX = jnp.iinfo(jnp.int32).max
+from repro.kernels._compat import CompilerParams
+from repro.kernels._lru import lru_touch
 
 
 def _lru_kernel(tags_ref, age_ref, stream_ref, otags_ref, oage_ref,
                 hits_ref, *, T: int, clock0: int):
     tags = tags_ref[...]          # (R, W)
     age = age_ref[...]            # (R, W)
-    R, W = tags.shape
 
     def body(t, carry):
         tags, age = carry
         blk = stream_ref[:, t]                      # (R,)
-        valid = blk >= 0
-        hit_mask = tags == blk[:, None]             # (R, W)
-        hit = jnp.any(hit_mask, axis=1) & valid
-        empty = tags == -1
-        has_empty = jnp.any(empty, axis=1)
-        lru = jnp.argmin(jnp.where(empty, INT_MAX, age), axis=1)
-        first_empty = jnp.argmax(empty, axis=1)
-        victim = jnp.where(has_empty, first_empty, lru)
-        way = jnp.where(hit, jnp.argmax(hit_mask, axis=1), victim)  # (R,)
-        onehot = (jax.lax.broadcasted_iota(jnp.int32, (R, W), 1)
-                  == way[:, None])
-        write = onehot & valid[:, None]
-        tags = jnp.where(write, blk[:, None], tags)
-        age = jnp.where(write, clock0 + t, age)
+        tags, age, hit = lru_touch(tags, age, blk, clock0 + t)
         hits_ref[:, t] = hit
         return tags, age
 
@@ -82,7 +69,7 @@ def lru_sets(tags, age, streams, *, block_rows: int = 256,
             jax.ShapeDtypeStruct((rows, ways), jnp.int32),
             jax.ShapeDtypeStruct((rows, T), jnp.bool_),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(tags, age, streams)

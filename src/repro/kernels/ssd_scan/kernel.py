@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref, st_ref,
                 state_ref, *, n_chunks: int, block_h: int):
@@ -112,7 +114,7 @@ def ssd_scan_grid(x, dt, dA, Bm, Cm, *, block_h: int = 8,
             jax.ShapeDtypeStruct((B, H, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_h, p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, dA, Bm, Cm)

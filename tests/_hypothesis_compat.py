@@ -1,0 +1,98 @@
+"""Property-testing front-end: real ``hypothesis`` when installed, else a
+tiny deterministic fallback.
+
+The container image does not ship ``hypothesis``, and tier-1 must collect
+everywhere, so the seven property-test modules import ``given``/``settings``/
+``st`` from here.  The fallback implements exactly the strategy subset this
+suite uses (``integers``, ``floats``, ``lists``, ``sampled_from``,
+``booleans``) and runs ``max_examples`` deterministic draws per test (seeded
+from the test name), re-raising the first failure with the drawn arguments
+attached.  No shrinking, no database — just reproducible random sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        """Attach run parameters; accepts (and ignores) hypothesis-only
+        keywords like ``deadline``."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for ex in range(n):
+                    rng = np.random.default_rng((seed, ex))
+                    drawn = {k: s.draw(rng)
+                             for k, s in strategy_kwargs.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (draw {ex}): {drawn}"
+                        ) from e
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs])
+            return wrapper
+        return deco
+
+
+st = strategies

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import cachesim
 from repro.core.cachesim import (LAT_DRAM, LAT_L2, LAT_LLC, CacheGeometry,

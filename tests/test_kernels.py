@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.kernels.cache_probe import ops as probe_ops, ref as probe_ref
 from repro.kernels.cache_probe.kernel import triad
@@ -161,7 +161,77 @@ def test_lru_kernel_matches_core_simulator():
     assert kernel_sets == core_sets
 
 
+# -- cachesim step: deterministic interpret-mode parity sweep --------------------------
+
+@pytest.mark.parametrize("rows,ways,T,seed", [
+    (4, 4, 1, 0),
+    (8, 8, 33, 1),      # T not a multiple of anything
+    (16, 4, 48, 2),
+    (32, 8, 17, 3),
+])
+def test_lru_kernel_parity_sweep(rows, ways, T, seed):
+    """cachesim_step Pallas kernel vs ref.py oracle, interpret mode on CPU
+    (deterministic companion to the property test above)."""
+    rng = np.random.default_rng(seed)
+    tags = np.full((rows, ways), -1, np.int32)
+    tags[: rows // 2, : ways // 2] = rng.integers(0, 64, (rows // 2,
+                                                          ways // 2))
+    age = np.zeros((rows, ways), np.int32)
+    streams = rng.integers(-1, 64, size=(rows, T)).astype(np.int32)
+    t_k, a_k, h_k = sim_ops.simulate_rows(jnp.asarray(tags), jnp.asarray(age),
+                                          jnp.asarray(streams))
+    t_r, a_r, h_r = sim_ref.lru_sets_ref(jnp.asarray(tags), jnp.asarray(age),
+                                         jnp.asarray(streams))
+    np.testing.assert_array_equal(np.asarray(t_k), np.asarray(t_r))
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+
+
 # -- cache probe ------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lanes,ways,T,seed", [
+    (8, 4, 24, 0),
+    (16, 8, 40, 1),
+    (64, 8, 40, 2),     # multi-block grid
+    (32, 16, 12, 3),    # short prime, high associativity
+])
+def test_prime_probe_kernel_parity(lanes, ways, T, seed):
+    """Batched Prime+Probe verdict kernel vs ref.py oracle (interpret mode),
+    with pre-populated lane states."""
+    rng = np.random.default_rng(seed)
+    tags = np.full((lanes, ways), -1, np.int32)
+    tags[::2, : ways // 2] = rng.integers(100, 164, (lanes // 2, ways // 2))
+    age = np.zeros((lanes, ways), np.int32)
+    streams = rng.integers(-1, 64, (lanes, T)).astype(np.int32)
+    targets = rng.integers(0, 64, lanes).astype(np.int32)
+    k = np.asarray(probe_ops.probe_verdicts(
+        jnp.asarray(tags), jnp.asarray(age), jnp.asarray(streams),
+        jnp.asarray(targets)))
+    r = np.asarray(probe_ref.prime_probe_ref(
+        jnp.asarray(tags), jnp.asarray(age), jnp.asarray(streams),
+        jnp.asarray(targets)))
+    np.testing.assert_array_equal(k, r)
+
+
+def test_prime_probe_kernel_lru_eviction_law():
+    """Under LRU, the verdict obeys the conflict-eviction law the probing
+    stack relies on: evicted iff >= ways distinct other blocks follow the
+    target's install (independent of pre-existing lane residents)."""
+    rng = np.random.default_rng(7)
+    lanes, ways, T = 32, 8, 48
+    tags = np.full((lanes, ways), -1, np.int32)
+    tags[::2, :4] = rng.integers(1000, 1064, (lanes // 2, 4))
+    age = np.zeros((lanes, ways), np.int32)
+    targets = rng.integers(0, 64, lanes).astype(np.int32)
+    streams = rng.integers(-1, 64, (lanes, T)).astype(np.int32)
+    streams[streams == targets[:, None]] = -1    # no in-stream refresh
+    v = np.asarray(probe_ops.probe_verdicts(
+        jnp.asarray(tags), jnp.asarray(age), jnp.asarray(streams),
+        jnp.asarray(targets)))
+    for b in range(lanes):
+        distinct = len(set(int(x) for x in streams[b] if x >= 0))
+        assert bool(v[b]) == (distinct >= ways), (b, distinct)
+
 
 @pytest.mark.parametrize("rows,block", [(512, 512), (1024, 256), (64, 64)])
 def test_triad_kernel(rows, block):

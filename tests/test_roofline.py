@@ -108,7 +108,11 @@ VALIDATE_SCRIPT = textwrap.dedent("""
         ab = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
               for k, v in input_specs(cfg, shape).items()}
         compiled = jitted.lower(astate, ab).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    # jax<=0.4.x returns a per-device list of dicts; newer versions a dict
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    hlo_flops = ca["flops"]
     ana = rl.analytic_costs(cfg, shape, 256, microbatches=1, remat="none")
     ratio = ana.flops_per_device / hlo_flops
     print("RATIO", ratio)

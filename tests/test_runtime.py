@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.configs.base import ShapeSpec, get_config, reduced_config
 from repro.data.pipeline import DataConfig, make_batch

@@ -1,7 +1,7 @@
 """ColoredStagingPool (CAP-TPU data-path consumer) tests."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import ColoredStagingPool
 
