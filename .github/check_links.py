@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""Check that relative markdown links in the given files/dirs resolve.
+
+    python .github/check_links.py README.md docs
+
+Flags `[text](target)` links whose target is a relative path that does not
+exist (anchors and external URLs are skipped).  Exit 1 on any broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(args):
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+
+
+def main() -> int:
+    broken = []
+    for md in md_files(sys.argv[1:] or ["."]):
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                broken.append(f"{md}: {target}")
+    for b in broken:
+        print(f"BROKEN {b}")
+    if not broken:
+        print("all relative markdown links resolve")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,8 @@ Fig 7b   — eviction rate vs wait window under light/heavy contention
 Fig 10   — CAS throughput improvement under asymmetric contention
 Fig 11   — CAP latency improvement (vanilla / CAP / CAP+vscan)
 Fig 12   — CacheX monitoring overhead
+fleet    — Fig 10 / Tables 7-8 analogs, closed-loop: policy x platform x
+           CAP sweep through the probe->decide->act->measure fleet loop
 """
 
 from __future__ import annotations
@@ -273,6 +275,45 @@ def bench_scenario_matrix():
              f"dispatches={r.dispatches};accesses={r.accesses}")
 
 
+def bench_fleet():
+    """Fig 10 / Tables 7-8 analogs via the closed-loop fleet simulator:
+    3 policies x every platform x CAP on/off through the real
+    probe->decide->act->measure loop (`repro.core.fleet`).  Acceptance: CAS
+    places the cache-sensitive task in the quiet domain on >= 5 of 6
+    platforms while the EEVDF baseline does not, with a CAP-on-vs-off
+    throughput delta per platform."""
+    import os
+
+    from repro.core.fleet import (fig10_summary, run_fleet_matrix,
+                                  speedup_summary)
+    platforms = [p for p in os.environ.get("FLEET_PLATFORMS", "").split(",")
+                 if p] or None
+    seeds = tuple(int(s) for s in
+                  os.environ.get("FLEET_SEEDS", "0").split(",") if s) or (0,)
+    with timer() as t:
+        reports = run_fleet_matrix(platforms=platforms, seeds=seeds)
+    for r in reports:
+        emit(f"fleet.{r.platform}.{r.policy}_cap_{r.cap}",
+             r.wall_s * 1e6,
+             f"thr={r.throughput:.1f};quiet_res={r.quiet_residency:.2f};"
+             f"hot_rate={r.hot_rate:.2f};quiet_rate={r.quiet_rate:.2f};"
+             f"ws_lat={r.ws_lat_cycles:.0f}cyc;"
+             f"recolors={r.recolor_events};reclaims={r.reclaims};"
+             f"dispatches={r.dispatches}")
+    f10 = fig10_summary(reports)
+    emit("fleet.fig10_residency", 0.0,
+         f"cas_quiet_platforms={f10['cas_quiet']}/{f10['n_platforms']};"
+         f"eevdf_pinned_platforms={f10['eevdf_pinned']}/{f10['n_platforms']};"
+         f"separated={f10['separated']}/{f10['n_platforms']}")
+    for plat, row in speedup_summary(reports).items():
+        emit(f"fleet.table78_{plat}", 0.0,
+             f"cas_vs_eevdf={100 * row['cas_vs_eevdf']:.1f}%;"
+             f"cas_vs_rusty={100 * row['cas_vs_rusty']:.1f}%;"
+             f"cap_on_vs_off={100 * row['cap_on_vs_off']:.1f}%")
+    emit("fleet.matrix_wall", t["us"],
+         f"runs={len(reports)};seeds={len(seeds)}")
+
+
 def run_all():
     bench_table2_eviction_construction()
     bench_table3_associativity()
@@ -284,3 +325,4 @@ def run_all():
     bench_fig11_cap()
     bench_fig12_overhead()
     bench_scenario_matrix()
+    bench_fleet()

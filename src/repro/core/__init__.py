@@ -1,3 +1,19 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""CacheX core: simulator, scenario matrix, probing stack, policies, drivers.
+
+Module map (data-flow diagram and paper-section ownership in
+docs/ARCHITECTURE.md):
+
+  cachesim    bit-exact L2 + sliced/directory LLC simulator; the batched
+              multi-set probe engine (`access_streams_batched`)
+  host_model  SimHost (hypervisor ground truth) / GuestVM (the only surface
+              probing code may touch) + canned co-tenant traffic generators
+  platforms   CachePlatform registry: the cloud-provisioning scenario matrix
+  eviction    VEV — minimal eviction sets + associativity (§3.1)
+  color       VCOL — virtual page colors + colored free lists (§3.2)
+  vscan       VSCAN — windowed Prime+Probe contention monitoring (§3.3)
+  cas         CAS — contention tiers + placement policies (§4.1)
+  cap         CAP — color-aware page-cache allocation (§4.2)
+  runner      run_cachex: one-shot pipeline per scenario + shared stages
+  fleet       closed-loop fleet simulator: probe→decide→act→measure
+              (Fig 10 / Tables 7-8 analogs via `run_fleet_matrix`)
+"""

@@ -30,9 +30,27 @@ from repro.core.cas import HYSTERESIS_INTERVALS
 
 @dataclasses.dataclass
 class CapStats:
+    """Counters exposed by :class:`CapAllocator`.
+
+    ``allocated``       pages handed out over the allocator's lifetime.
+    ``color_rollovers`` times allocation proceeded to the next color because
+                        the current one was exhausted.
+    ``recolor_events``  adaptive recolorings: the committed hottest color
+                        changed after the 3-interval rule and the page cache
+                        was dropped.  Counted by :meth:`CapAllocator.
+                        step_interval` (the policy), *not* by
+                        :meth:`CapAllocator.reclaim_all` (the mechanism),
+                        which also serves plain memory-pressure reclaim.
+    ``reclaims``        total :meth:`CapAllocator.reclaim_all` invocations,
+                        whatever the reason (recolor or memory pressure).
+    ``fallback_allocs`` allocation requests that found every colored list
+                        empty (caller falls back to the default allocator).
+    """
+
     allocated: int = 0
     color_rollovers: int = 0
     recolor_events: int = 0
+    reclaims: int = 0
     fallback_allocs: int = 0
 
 
@@ -82,8 +100,11 @@ class CapAllocator:
     def _order(self) -> List[int]:
         if not self.use_contention:
             return sorted(self.free_lists)
-        # committed hottest first, then current ranking order
+        # committed hottest first, then current ranking order; colors with
+        # no contention measurement (e.g. their monitored sets were pruned)
+        # go last — coldest-known assumption
         order = [c for c in self.ranking if c in self.free_lists]
+        order += sorted(c for c in self.free_lists if c not in order)
         if self.committed_hottest in order:
             order.remove(self.committed_hottest)
             order.insert(0, self.committed_hottest)
@@ -111,9 +132,11 @@ class CapAllocator:
     # -- reclaim (recolor event / memory pressure) ---------------------------------
     def reclaim_all(self) -> List[int]:
         """Drop all file-backed page-cache pages back into their colored
-        lists (the paper's recoloring mechanism: subsequent buffered-file
-        allocations repopulate from the new hottest color)."""
-        self.stats.recolor_events += 1
+        lists.  This is a *mechanism*, invoked both by the paper's adaptive
+        recoloring (via :meth:`step_interval`, which is what counts
+        ``recolor_events``) and by plain memory-pressure reclaim — so it
+        only bumps the reason-agnostic ``reclaims`` counter itself."""
+        self.stats.reclaims += 1
         for p in self.allocated_pages:
             self.free_lists.setdefault(self.page_color[p], []).append(p)
         dropped = self.allocated_pages
@@ -121,8 +144,10 @@ class CapAllocator:
         return dropped
 
     def step_interval(self, per_color_rate: Dict[int, float]) -> bool:
-        """One monitoring interval: update ranks; reclaim on recolor."""
+        """One monitoring interval: update ranks; reclaim on recolor.  This
+        is the only place a reclaim counts as a ``recolor_event``."""
         if self.update_contention(per_color_rate):
+            self.stats.recolor_events += 1
             self.reclaim_all()
             return True
         return False

@@ -113,6 +113,38 @@ def allow_pull(src_domain: int, dst_domain: int, tiers: Dict[int, int],
     return True
 
 
+def policy_place(policy: str, idle: Sequence[int], vcpu_domain: Dict[int, int],
+                 tiers: Optional[Dict[int, int]], prev_vcpu: Optional[int],
+                 rr_index: int = 0) -> Optional[int]:
+    """Place one waking task under a named scheduling policy.
+
+    Shared by :class:`MiniSched` (the toy Fig 10 harness) and the closed-loop
+    fleet simulator (`repro.core.fleet`):
+
+      * ``"cas"``   — :func:`select_vcpu` over the committed contention tiers
+        (affinity honoured only within the best tier),
+      * ``"rusty"`` — scx_rusty-like: previous vCPU if idle, else a
+        round-robin pick indexed by ``rr_index``,
+      * ``"eevdf"`` — strong cache affinity: previous vCPU, else any idle
+        vCPU in the previous vCPU's domain, else the first idle vCPU.
+    """
+    idle = sorted(idle)
+    if not idle:
+        return None
+    if policy == "cas":
+        return select_vcpu(idle, vcpu_domain, tiers or {},
+                           PlacementRequest(prev_vcpu=prev_vcpu))
+    if policy == "rusty":
+        return prev_vcpu if prev_vcpu in idle else idle[rr_index % len(idle)]
+    if policy == "eevdf":
+        if prev_vcpu in idle:
+            return prev_vcpu
+        prev_d = vcpu_domain.get(prev_vcpu, None)
+        same = [x for x in idle if vcpu_domain[x] == prev_d]
+        return same[0] if same else idle[0]
+    raise ValueError(f"unknown policy {policy!r}")
+
+
 # ---------------------------------------------------------------------------
 # MiniSched: discrete-time validation harness for Fig 10.
 # ---------------------------------------------------------------------------
@@ -149,20 +181,9 @@ class MiniSched:
             idle = sorted(free)
             if not idle:
                 break
-            if self.policy == "cas" and self.tiers is not None:
-                v = select_vcpu(idle, self.vcpu_domain, self.tiers.tier,
-                                PlacementRequest(prev_vcpu=task.vcpu))
-            elif self.policy == "rusty":
-                # previous-vCPU affinity, else round-robin across domains
-                v = task.vcpu if task.vcpu in idle else idle[int(ti) % len(idle)]
-            else:  # eevdf-like: strong cache affinity to previous vCPU/domain
-                if task.vcpu in idle:
-                    v = task.vcpu
-                else:
-                    prev_d = self.vcpu_domain.get(task.vcpu, None)
-                    same = [x for x in idle
-                            if self.vcpu_domain[x] == prev_d]
-                    v = same[0] if same else idle[0]
+            v = policy_place(self.policy, idle, self.vcpu_domain,
+                             self.tiers.tier if self.tiers else None,
+                             task.vcpu, rr_index=int(ti))
             task.vcpu = v
             free.discard(v)
             d = self.vcpu_domain[v]

@@ -1,0 +1,506 @@
+"""Closed-loop CAS/CAP fleet simulator (paper §4, §6.3-6.4, Fig 10).
+
+`run_cachex` exercises the probing stack one stage at a time; this module
+closes the loop the paper's payoff sections describe: the probed cache
+abstraction *changes scheduling and page-cache decisions*, and those
+decisions change what the next probe measures.
+
+One :class:`FleetSim` boots a :class:`~repro.core.platforms.CachePlatform`
+(widened to >= 2 LLC domains so placement matters, Fig 10's setup), builds
+the real VCOL + VSCAN probing stack through the same stage builders as
+`run_cachex`, then iterates a genuine probe→decide→act→measure loop:
+
+  * **probe** — `VScan.monitor_once()` runs a windowed Prime+Probe interval
+    (one fused `access_streams_batched` dispatch over every monitored set);
+    whatever traffic the fleet's own placement routed into each domain
+    during the wait window is what gets measured,
+  * **decide** — the *measured* per-domain rates feed CAS's
+    :class:`~repro.core.cas.TierTracker`; the measured per-color rates feed
+    CAP's :class:`~repro.core.cap.CapAllocator` ranking,
+  * **act** — each guest workload is (re)placed by the active policy
+    (``cas`` | ``rusty`` | ``eevdf`` via :func:`repro.core.cas.policy_place`)
+    and its LLC traffic is retargeted into its new domain
+    (`SimHost.retarget_cotenant`); the page-cache streamer allocates its
+    interval's pages from CAP's colored lists (or the vanilla mixed-color
+    order when CAP is off) and streams them through the simulated caches,
+  * **measure** — per-workload progress for the interval is computed by a
+    single jitted kernel (`fleet_interval_progress`): per-tick contention
+    accounting scatter-adds every workload's duty-cycled traffic into its
+    domain, and a vmapped lane per workload integrates the paper's IPC model
+    ``ipc / (1 + sensitivity * contention)``; the cache-sensitive workload
+    is additionally slowed by its *measured* working-set latency (one
+    batched timed probe per interval), which is how CAP's protection shows
+    up in throughput.
+
+Asymmetric contention (Fig 10): a polluter co-tenant pins LLC pressure on
+domain 0, where every workload is born.  CAS discovers the asymmetry from
+VSCAN's measured rates and steers the fleet to the quiet domain after the
+3-interval hysteresis; EEVDF/rusty-style affinity keeps tasks on their
+birth domain.  A congruent-set poisoner keeps one virtual color's monitored
+sets saturated so CAP's measured ranking steers page-cache streams into the
+already-thrashed zone, away from the sensitive working set (§4.2).
+
+`run_fleet_matrix()` sweeps policy x platform x seed in one call;
+`fig10_summary` / `speedup_summary` reduce the reports to the paper's
+Fig 10 domain-residency claim and Table 7/8-style speedup deltas
+(`benchmarks/bench_paper_tables.py --only fleet` emits them as CSV).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cachesim import BLOCKS_PER_PAGE, LAT_L2
+from repro.core.cap import CapAllocator
+from repro.core.cas import TierTracker, policy_place
+from repro.core.host_model import (CotenantWorkload, congruent_gen,
+                                   polluter_gen)
+from repro.core.platforms import CachePlatform, get_platform
+from repro.core.runner import build_color_stage, build_vscan_stage
+
+FLEET_POLICIES = ("eevdf", "rusty", "cas")
+#: (policy, cap) combinations swept by default: the three policies with CAP
+#: on, plus CAS with CAP off for the Table 8-style CAP-on-vs-off delta.
+DEFAULT_COMBOS = (("eevdf", "on"), ("rusty", "on"),
+                  ("cas", "on"), ("cas", "off"))
+POLLUTED_DOMAIN = 0   # the polluter is always pinned here; quiet = 1
+
+
+@dataclasses.dataclass
+class FleetWorkload:
+    """One guest workload co-running on the fleet.
+
+    ``sensitivity``     IPC penalty slope vs domain contention (Fig 2a/10).
+    ``llc_rate_per_ms`` LLC accesses/ms it injects into its current domain
+                        while bursting (routed as real simulator traffic).
+    ``duty_period``     ticks per burst cycle; ``duty_frac`` the fraction of
+                        the cycle spent bursting (traffic + the IPC model
+                        integrate the same duty cycle).
+    ``mem_frac``        fraction of its cycles stalled on the working set;
+                        > 0 only for the page-cache-sensitive workload,
+                        whose measured working-set latency scales its IPC.
+    """
+
+    name: str
+    sensitivity: float
+    llc_rate_per_ms: float
+    duty_period: int = 8
+    duty_frac: float = 1.0
+    mem_frac: float = 0.0
+    vcpu: Optional[int] = None
+    done_work: float = 0.0
+
+
+def default_workloads() -> List[FleetWorkload]:
+    """The Fig 10-style trio: a cache-sensitive task with a hot working
+    set, a page-cache streamer, and a bursty batch task."""
+    return [
+        FleetWorkload("ws_sensitive", sensitivity=1.0, llc_rate_per_ms=15.0,
+                      duty_period=8, duty_frac=1.0, mem_frac=0.35),
+        FleetWorkload("pc_streamer", sensitivity=0.1, llc_rate_per_ms=10.0,
+                      duty_period=8, duty_frac=0.75),
+        FleetWorkload("batch_load", sensitivity=0.3, llc_rate_per_ms=20.0,
+                      duty_period=16, duty_frac=0.5),
+    ]
+
+
+def fleet_view(plat: CachePlatform, n_workloads: int) -> CachePlatform:
+    """Widen a platform to the fleet topology: >= 2 LLC domains (so
+    placement decisions exist) with enough cores per domain that the whole
+    fleet fits in the quiet domain.  Geometry, provisioning, replacement,
+    noise and probing parameters are untouched."""
+    return dataclasses.replace(
+        plat,
+        n_domains=max(2, plat.n_domains),
+        cores_per_domain=max(plat.cores_per_domain, n_workloads))
+
+
+@functools.partial(jax.jit, static_argnames=("n_domains", "ticks"))
+def fleet_interval_progress(domain_idx, rates, duty_period, duty_on, sens,
+                            ipc0, slowdown, noise_dom, scale, *,
+                            n_domains: int, ticks: int):
+    """One monitoring interval of per-tick progress + contention accounting
+    for all workloads, in one jitted dispatch.
+
+    Shapes: ``domain_idx/rates/duty_period/duty_on/sens/ipc0/slowdown`` are
+    (B,) over workloads; ``noise_dom`` is (D,) non-fleet co-tenant traffic
+    per domain (accesses/ms); ``scale`` converts accesses/ms to the
+    dimensionless contention index (100 / LLC lines per domain, i.e. the
+    %-of-LLC-touched-per-ms scale VSCAN's rates live on).
+
+    Per tick t: workload w is bursting iff ``t % duty_period[w] <
+    duty_on[w]``; domain traffic is the scatter-add of bursting workloads'
+    rates plus ``noise_dom``; per-tick progress of each (vmapped) workload
+    lane is ``ipc0 / ((1 + sens * contention[domain]) * slowdown)``.
+    Returns (per-workload progress summed over ticks, per-domain mean
+    contention index).
+    """
+    t = jnp.arange(ticks, dtype=jnp.int32)
+    active = (t[None, :] % duty_period[:, None]) < duty_on[:, None]   # (B,T)
+    inj = rates[:, None] * active                                      # (B,T)
+    traffic = (jnp.zeros((n_domains, ticks)).at[domain_idx].add(inj)
+               + noise_dom[:, None])                                   # (D,T)
+    cont = traffic * scale
+    per_tick = ipc0[:, None] / ((1.0 + sens[:, None] * cont[domain_idx])
+                                * slowdown[:, None])                   # (B,T)
+    return per_tick.sum(axis=1), cont.mean(axis=1)
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Result of one closed-loop fleet run (one platform x policy x cap).
+
+    ``quiet_residency``  post-warmup fraction of intervals the
+                         cache-sensitive workload spent in the quiet domain
+                         (Fig 10's metric; 1.0 = always steered away).
+    ``throughput``       post-warmup done work summed over workloads (IPC
+                         model units; ratios across runs are the Table 7/8
+                         speedups).
+    ``ws_lat_cycles``    mean measured working-set latency (simulated
+                         cycles) post-warmup — CAP's protection shows here.
+    ``hot_rate``/``quiet_rate``  mean *measured* VSCAN EWMA rates
+                         (%-lines/ms) of the polluted / quiet domain.
+    """
+
+    platform: str
+    policy: str
+    cap: str                     # "on" | "off"
+    seed: int
+    n_intervals: int
+    warmup: int
+    throughput: float
+    per_workload: Dict[str, float]
+    quiet_residency: float
+    hot_rate: float
+    quiet_rate: float
+    tiers: Dict[int, int]
+    ws_lat_cycles: float
+    recolor_events: int
+    reclaims: int
+    cap_allocated: int
+    dispatches: int
+    accesses: int
+    wall_s: float
+
+    def row(self) -> str:
+        """One CSV-ish summary row (benchmark harness contract)."""
+        return (f"{self.platform},{self.policy},cap={self.cap},"
+                f"thr={self.throughput:.1f},"
+                f"quiet_res={self.quiet_residency:.2f},"
+                f"hot={self.hot_rate:.2f},quiet={self.quiet_rate:.2f},"
+                f"ws_lat={self.ws_lat_cycles:.0f}cyc,"
+                f"recolors={self.recolor_events},wall={self.wall_s:.2f}s")
+
+
+class FleetSim:
+    """Closed-loop co-run harness over one platform (see module docstring)."""
+
+    def __init__(self, platform: Union[str, CachePlatform],
+                 policy: str = "cas", cap: str = "on",
+                 workloads: Optional[List[FleetWorkload]] = None,
+                 seed: int = 0, use_batch: bool = True,
+                 n_intervals: int = 12, warmup: int = 4,
+                 ticks_per_interval: int = 32, stream_len: int = 192,
+                 ws_pages: int = 8, thresholds: Sequence[float] = (1.0, 4.0)):
+        if policy not in FLEET_POLICIES:
+            raise ValueError(f"policy must be one of {FLEET_POLICIES}")
+        plat0 = get_platform(platform) if isinstance(platform, str) else platform
+        self.tasks = workloads if workloads is not None else default_workloads()
+        self.plat = fleet_view(plat0, len(self.tasks))
+        self.policy = policy
+        self.cap_on = (cap == "on")
+        self.seed = seed
+        self.use_batch = use_batch
+        self.n_intervals = n_intervals
+        self.warmup = warmup
+        self.ticks = ticks_per_interval
+        self.stream_len = stream_len
+        self.n_ws_pages = ws_pages
+        self.rng = np.random.default_rng(seed + 99)
+
+        self.host, self.vm = self.plat.make_host_vm(seed=seed)
+        self.vcpu_domain = {v: c // self.plat.cores_per_domain
+                            for v, c in enumerate(self.vm.vcpu_cores)}
+
+        # -- probing stack: identical stages to run_cachex ------------------
+        self.vcol, self.cf = build_color_stage(self.vm, self.plat, seed,
+                                               use_batch=use_batch)
+        self.vs, self.vs_info, self.domain_vcpus = build_vscan_stage(
+            self.vm, self.plat, self.vcol, self.cf, seed,
+            use_batch=use_batch, prune_conflicts=True)
+        self.tt = TierTracker(keys=sorted(self.domain_vcpus),
+                              thresholds=list(thresholds))
+
+        # -- asymmetric contention (Fig 10): pollute domain 0 ---------------
+        llc = self.plat.llc
+        self.host.add_cotenant(CotenantWorkload(
+            "fig10_polluter", POLLUTED_DOMAIN,
+            rate_per_ms=0.6 * llc.n_sets * llc.n_slices,
+            gen=polluter_gen(region_pages=2048)))
+
+        self._setup_page_cache()
+
+        # -- the fleet: every workload born on the polluted domain ----------
+        for i, task in enumerate(self.tasks):
+            task.vcpu = (POLLUTED_DOMAIN * self.plat.cores_per_domain + i
+                         if task.vcpu is None else task.vcpu)
+            self.host.add_cotenant(CotenantWorkload(
+                f"fleet:{task.name}", self.vcpu_domain[task.vcpu],
+                rate_per_ms=task.llc_rate_per_ms * task.duty_frac,
+                gen=polluter_gen(region_pages=1024,
+                                 base_page=(1 << 19) + i * (1 << 15))))
+        # convention: the first workload owns the measured working set, the
+        # second drives the page-cache stream
+        self._sens = self.tasks[0]
+        self._streamer = self.tasks[min(1, len(self.tasks) - 1)]
+
+    # ------------------------------------------------------------------ CAP
+    def _true_color(self, pages: Sequence[int]) -> int:
+        """Host-truth L2 color label of a virtual-color group (experiment
+        instrumentation, mirroring §6.2's validation hypercall use — the
+        guest-side decision stack only ever sees measured rates)."""
+        n = self.plat.n_l2_colors
+        truths = [self.vm.hypercall_hpa_page(int(p)) % n for p in pages]
+        vals, counts = np.unique(truths, return_counts=True)
+        return int(vals[np.argmax(counts)])
+
+    def _rows_of_true_color(self, t: int) -> List[int]:
+        """LLC set-index rows (at aligned offset 0) that pages of true L2
+        color ``t`` can land on."""
+        n_rows = self.plat.n_llc_rows_per_offset
+        n_col = self.plat.n_l2_colors
+        return sorted({h % n_rows for h in range(n_rows * n_col)
+                       if h % n_col == t})
+
+    def _setup_page_cache(self) -> None:
+        """Colored free lists, the sensitive working set, the vanilla
+        stream order, and the congruent-set poisoner that keeps the stream
+        target color's monitored sets hot."""
+        pool = self.vm.alloc_pages(
+            min(240 * max(1, self.cf.n_colors), 1024))
+        lists = self.vcol.build_free_lists(self.cf, pool)
+        truths = {c: self._true_color(ps) for c, ps in lists.items() if ps}
+        d0_colors = {m.color for m in self.vs.monitored
+                     if m.domain == POLLUTED_DOMAIN}
+
+        # stream color P: has monitored sets in the polluted domain (so the
+        # poisoner is measurable) and a deep free list; working-set color W:
+        # LLC rows disjoint from P's where the geometry allows
+        cands = [c for c in sorted(lists, key=lambda c: -len(lists[c]))
+                 if lists[c]]
+        p_cands = [c for c in cands if c in d0_colors] or cands
+        self.stream_color = p_cands[0]
+        p_rows = set(self._rows_of_true_color(truths[self.stream_color]))
+
+        def disjointness(c):
+            return (len(set(self._rows_of_true_color(truths[c])) - p_rows),
+                    len(lists[c]))
+        w_cands = [c for c in cands if c != self.stream_color]
+        self.ws_color = max(w_cands, key=disjointness)
+
+        ws = [lists[self.ws_color].pop()
+              for _ in range(min(self.n_ws_pages,
+                                 len(lists[self.ws_color]) - 1))]
+        self.ws_lines = np.array([self.vm.gva(p, off)
+                                  for p in ws for off in (0, 64)])
+        self.free_lists = lists
+        self.cap = CapAllocator({c: list(v) for c, v in lists.items()},
+                                use_contention=True)
+        # vanilla order: interleave colors round-robin (the kernel's
+        # color-oblivious allocator), truncated to the stream length
+        depth = max(len(v) for v in lists.values())
+        mixed = [lists[c][j] for j in range(depth) for c in sorted(lists)
+                 if j < len(lists[c])]
+        self.vanilla_order = mixed[:self.stream_len]
+
+        # congruent-set poisoner: saturates P's offset-0 monitored rows in
+        # the polluted domain so the measured per-color ranking stays put
+        rows = self._rows_of_true_color(truths[self.stream_color])
+        target_sets = [r * BLOCKS_PER_PAGE for r in rows]
+        n_cells = max(1, len(rows) * self.plat.llc.n_slices)
+        self.host.add_cotenant(CotenantWorkload(
+            "color_poisoner", POLLUTED_DOMAIN,
+            rate_per_ms=12.0 * n_cells,
+            gen=congruent_gen(target_sets, self.plat.llc.n_sets,
+                              base_page=1 << 17)))
+
+    def _stream_pages(self) -> List[int]:
+        if not self.cap_on:
+            return list(self.vanilla_order)
+        pages = [self.cap.allocate() for _ in range(self.stream_len)]
+        return [p for p in pages if p is not None]
+
+    # ----------------------------------------------------------------- loop
+    def _noise_per_domain(self) -> np.ndarray:
+        out = np.zeros(self.plat.n_domains)
+        for wl in self.host.cotenants:
+            if wl.enabled and not wl.name.startswith("fleet:"):
+                out[wl.domain] += wl.rate_per_ms
+        return out
+
+    def run(self) -> FleetReport:
+        t0 = time.perf_counter()
+        plat, vm, tasks = self.plat, self.vm, self.tasks
+        vcpus = sorted(self.vcpu_domain)
+        scale = 100.0 / plat.llc.n_lines     # accesses/ms -> contention idx
+
+        sens_v = jnp.array([t.sensitivity for t in tasks])
+        rate_v = jnp.array([t.llc_rate_per_ms for t in tasks])
+        period_v = jnp.array([t.duty_period for t in tasks], jnp.int32)
+        duty_on_v = jnp.array([int(round(t.duty_period * t.duty_frac))
+                               for t in tasks], jnp.int32)
+        ipc_v = jnp.ones(len(tasks))
+
+        quiet_hits = scored = 0
+        work_post = np.zeros(len(tasks))
+        lat_hist: List[float] = []
+        hot_hist: List[float] = []
+        quiet_hist: List[float] = []
+        for k in range(self.n_intervals):
+            # act (from last interval's decision): route each workload's
+            # traffic into its current domain
+            for task in tasks:
+                self.host.retarget_cotenant(f"fleet:{task.name}",
+                                            domain=self.vcpu_domain[task.vcpu])
+            # probe: one windowed Prime+Probe interval over every domain
+            self.vs.monitor_once()
+            dom_rates = self.vs.per_domain_rate()
+            # decide: measured rates drive CAS tiers and CAP's ranking
+            self.tt.update(dom_rates)
+            if self.cap_on:
+                self.cap.step_interval(self.vs.per_color_rate())
+            # act: policy placement (wakeup order randomized per interval)
+            free = set(vcpus)
+            for ti in self.rng.permutation(len(tasks)):
+                task = tasks[ti]
+                v = policy_place(self.policy, sorted(free), self.vcpu_domain,
+                                 self.tt.tier, task.vcpu, rr_index=int(ti))
+                task.vcpu = v
+                free.discard(v)
+            # act: this interval's page-cache stream through the real caches
+            vm.access(self.ws_lines, vcpu=self._sens.vcpu)
+            stream = self._stream_pages()
+            stream_lines = np.array([vm.gva(p, off)
+                                     for p in stream for off in (0, 64)])
+            vm.access(stream_lines, vcpu=self._streamer.vcpu)
+            # measure: the working set's latency after the stream (batched
+            # timed lanes; uncommitted measurement probe)
+            vm.warm_timer()
+            lat = float(np.mean(vm.timed_access_batch(
+                [self.ws_lines], vcpu=[self._sens.vcpu])[0]))
+            if self.cap_on:
+                self.cap.reclaim_all()   # interval end: page cache dropped
+                #                          under memory pressure (mechanism
+                #                          only — not a recolor event)
+            # measure: vectorized per-tick progress + contention accounting
+            slow_v = jnp.array([1.0 + t.mem_frac * max(0.0, lat - LAT_L2)
+                                / LAT_L2 for t in tasks])
+            dom_idx = jnp.array([self.vcpu_domain[t.vcpu] for t in tasks],
+                                jnp.int32)
+            prog, _ = fleet_interval_progress(
+                dom_idx, rate_v, period_v, duty_on_v, sens_v, ipc_v, slow_v,
+                jnp.asarray(self._noise_per_domain()), scale,
+                n_domains=plat.n_domains, ticks=self.ticks)
+            prog = np.asarray(prog)
+            for t_, p in zip(tasks, prog):
+                t_.done_work += float(p)
+            if k >= self.warmup:
+                scored += 1
+                # any unpolluted domain counts as quiet (>2-domain views)
+                quiet_hits += int(self.vcpu_domain[self._sens.vcpu]
+                                  != POLLUTED_DOMAIN)
+                work_post += prog
+                lat_hist.append(lat)
+                hot_hist.append(dom_rates.get(POLLUTED_DOMAIN, 0.0))
+                quiet_hist.append(_mean([v for d, v in dom_rates.items()
+                                         if d != POLLUTED_DOMAIN]))
+
+        return FleetReport(
+            platform=self.plat.name, policy=self.policy,
+            cap="on" if self.cap_on else "off", seed=self.seed,
+            n_intervals=self.n_intervals, warmup=self.warmup,
+            throughput=float(work_post.sum()),
+            per_workload={t.name: float(w)
+                          for t, w in zip(tasks, work_post)},
+            quiet_residency=quiet_hits / max(1, scored),
+            hot_rate=float(np.mean(hot_hist)) if hot_hist else 0.0,
+            quiet_rate=float(np.mean(quiet_hist)) if quiet_hist else 0.0,
+            tiers=dict(self.tt.tier),
+            ws_lat_cycles=float(np.mean(lat_hist)) if lat_hist else 0.0,
+            recolor_events=self.cap.stats.recolor_events,
+            reclaims=self.cap.stats.reclaims,
+            cap_allocated=self.cap.stats.allocated,
+            dispatches=vm.stat_passes,
+            accesses=vm.stat_accesses,
+            wall_s=time.perf_counter() - t0,
+        )
+
+
+def run_fleet(platform: Union[str, CachePlatform], policy: str = "cas",
+              cap: str = "on", **kw) -> FleetReport:
+    """Run one closed-loop fleet scenario end to end."""
+    return FleetSim(platform, policy=policy, cap=cap, **kw).run()
+
+
+def run_fleet_matrix(platforms: Optional[List[str]] = None,
+                     combos: Sequence[Tuple[str, str]] = DEFAULT_COMBOS,
+                     seeds: Sequence[int] = (0,),
+                     **kw) -> List[FleetReport]:
+    """The policy x platform x seed sweep behind Fig 10 / Tables 7-8: every
+    (platform, policy, cap, seed) combination through the full closed loop.
+    jit caching makes repeat combos on one platform cheap; results feed
+    :func:`fig10_summary` and :func:`speedup_summary`."""
+    from repro.core.platforms import list_platforms
+    names = platforms if platforms is not None else list_platforms()
+    return [run_fleet(n, policy=pol, cap=cap, seed=s, **kw)
+            for n in names for pol, cap in combos for s in seeds]
+
+
+def _mean(vals: List[float]) -> float:
+    return float(np.mean(vals)) if vals else float("nan")
+
+
+def fig10_summary(reports: List[FleetReport],
+                  threshold: float = 0.5) -> Dict:
+    """Reduce a matrix sweep to the Fig 10 claim: per platform, the mean
+    quiet-domain residency of the cache-sensitive task under each policy
+    (CAP-on runs), plus the count of platforms where CAS steers it to the
+    quiet domain (residency >= threshold) while EEVDF does not."""
+    res: Dict[str, Dict[str, float]] = {}
+    for plat in sorted({r.platform for r in reports}):
+        res[plat] = {pol: _mean([r.quiet_residency for r in reports
+                                 if r.platform == plat and r.policy == pol
+                                 and r.cap == "on"])
+                     for pol in FLEET_POLICIES}
+    n = len(res)
+    cas_ok = sum(1 for v in res.values() if v.get("cas", 0) >= threshold)
+    eevdf_ok = sum(1 for v in res.values() if v.get("eevdf", 1) < threshold)
+    both = sum(1 for v in res.values()
+               if v.get("cas", 0) >= threshold
+               and v.get("eevdf", 1) < threshold)
+    return {"residency": res, "n_platforms": n, "cas_quiet": cas_ok,
+            "eevdf_pinned": eevdf_ok, "separated": both}
+
+
+def speedup_summary(reports: List[FleetReport]) -> Dict:
+    """Table 7/8-style deltas per platform: CAS throughput vs each baseline
+    (CAP on), and CAP-on vs CAP-off under CAS."""
+    out: Dict[str, Dict[str, float]] = {}
+    for plat in sorted({r.platform for r in reports}):
+        def thr(pol, cap):
+            return _mean([r.throughput for r in reports
+                          if r.platform == plat and r.policy == pol
+                          and r.cap == cap])
+        cas_on = thr("cas", "on")
+        row = {"cas_vs_eevdf": cas_on / thr("eevdf", "on") - 1.0,
+               "cas_vs_rusty": cas_on / thr("rusty", "on") - 1.0,
+               "cap_on_vs_off": cas_on / thr("cas", "off") - 1.0}
+        out[plat] = {k: float(v) for k, v in row.items()}
+    return out

@@ -119,6 +119,30 @@ class SimHost:
     def add_cotenant(self, wl: CotenantWorkload) -> None:
         self.cotenants.append(wl)
 
+    def cotenant(self, name: str) -> Optional[CotenantWorkload]:
+        for wl in self.cotenants:
+            if wl.name == name:
+                return wl
+        return None
+
+    def retarget_cotenant(self, name: str, domain: Optional[int] = None,
+                          rate_per_ms: Optional[float] = None,
+                          enabled: Optional[bool] = None) -> CotenantWorkload:
+        """Move/re-rate a registered traffic source.  The fleet simulator
+        uses this to route a guest workload's LLC traffic into whichever
+        domain the scheduler just placed it on — the *act* edge of the
+        probe→decide→act→measure loop."""
+        wl = self.cotenant(name)
+        if wl is None:
+            raise KeyError(f"no cotenant named {name!r}")
+        if domain is not None:
+            wl.domain = domain
+        if rate_per_ms is not None:
+            wl.rate_per_ms = rate_per_ms
+        if enabled is not None:
+            wl.enabled = enabled
+        return wl
+
     def _cotenant_stream(self, ms: float) -> Tuple[np.ndarray, np.ndarray]:
         blocks: List[np.ndarray] = []
         cores: List[np.ndarray] = []
@@ -375,6 +399,21 @@ def poisoner_gen(host: SimHost, target_set_index_bits: int, n_sets: int,
     base_block = base_page * BLOCKS_PER_PAGE
     cand = base_block + np.arange(pool_pages * BLOCKS_PER_PAGE)
     cand = cand[(cand % n_sets >= lo) & (cand % n_sets < hi)]
+
+    def gen(rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.choice(cand, size=n, replace=True)
+    return gen
+
+
+def congruent_gen(set_indices, n_sets: int, base_page: int = 1 << 18,
+                  span_pages: int = 4096):
+    """Traffic confined to exact LLC set-index residues (sharper than
+    `poisoner_gen`'s 1/16-zone granularity).  The fleet simulator uses it to
+    keep one virtual color's monitored sets saturated so CAP's measured
+    per-color ranking has a stable hottest color to steer streams into."""
+    base_block = base_page * BLOCKS_PER_PAGE
+    cand = base_block + np.arange(span_pages * BLOCKS_PER_PAGE)
+    cand = cand[np.isin(cand % n_sets, np.asarray(sorted(set_indices)))]
 
     def gen(rng: np.random.Generator, n: int) -> np.ndarray:
         return rng.choice(cand, size=n, replace=True)

@@ -61,21 +61,56 @@ class NoiseSpec:
 
 @dataclasses.dataclass(frozen=True)
 class CachePlatform:
-    """One provisioned-cache scenario a cloud VM may land on."""
+    """One provisioned-cache scenario a cloud VM may land on.
+
+    Field reference (docs/ARCHITECTURE.md has the pipeline context):
+
+    ``name``             registry key (``get_platform(name)``); appears in
+                         every benchmark CSV row and report.
+    ``description``      one-line human summary of the scenario.
+    ``l2``               per-core private L2 geometry (sets x ways); sets /
+                         blocks-per-page determines the page-color count
+                         VCOL must discover (``n_l2_colors``).
+    ``llc``              guest-*effective* LLC geometry — what probing
+                         should discover, after provisioning: under ``cat``
+                         its ``n_ways`` is the CAT allocation, under
+                         ``slice`` its ``n_slices`` is the visible subset.
+    ``provisioning``     how the hypervisor carved the LLC: ``dedicated``
+                         (whole LLC), ``cat`` (way-partitioned),
+                         ``slice`` (slice-partitioned), ``shared`` (full
+                         LLC + co-tenant noise).
+    ``llc_ways_total``   *hardware* associativity (== ``llc.n_ways`` unless
+                         ``cat``); reporting-only — the guest cannot see it.
+    ``llc_slices_total`` *hardware* slice count (== ``llc.n_slices`` unless
+                         ``slice``); reporting-only.
+    ``n_domains``        independent LLC domains (e.g. Milan CCXs); CAS
+                         places tasks across domains.
+    ``cores_per_domain`` private-L2 cores sharing each LLC domain.
+    ``replacement``      per-set policy, ``lru`` | ``random``; construction
+                         must not rely on LRU (the ``votes``/``prime_reps``
+                         knobs exist for ``random``).
+    ``slice_seed``       seed of the hidden slice hash (the uncontrollable
+                         HPA bits of §3.1-3.2); unknown to the guest.
+    ``noise``            co-tenant traffic attached at boot
+                         (:class:`NoiseSpec`, resolved lazily).
+    ``votes``            majority votes per eviction test — what the VM
+                         would pick after discovering a noisy/non-LRU
+                         scenario (3 on the shared platform).
+    ``prime_reps``       prime repetitions per test, same rationale.
+    """
 
     name: str
     description: str
     l2: CacheGeometry
-    llc: CacheGeometry            # guest-*effective* LLC geometry
-    provisioning: str = "dedicated"   # dedicated | cat | slice | shared
-    llc_ways_total: int = 0       # hardware ways (== llc.n_ways unless cat)
-    llc_slices_total: int = 0     # hardware slices (== llc.n_slices unless slice)
+    llc: CacheGeometry
+    provisioning: str = "dedicated"
+    llc_ways_total: int = 0
+    llc_slices_total: int = 0
     n_domains: int = 1
     cores_per_domain: int = 2
     replacement: str = "lru"
     slice_seed: int = 0x9E3779B9
     noise: Tuple[NoiseSpec, ...] = ()
-    # probing parameters the VM would pick after discovering the policy:
     votes: int = 1
     prime_reps: int = 1
 

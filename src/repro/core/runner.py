@@ -33,29 +33,45 @@ from repro.core.vscan import VScan
 
 @dataclasses.dataclass
 class CacheXReport:
-    platform: str
-    provisioning: str
-    # VEV
-    vev_target_sets: int
-    vev_built_sets: int
-    vev_verified_sets: int        # hypercall-validated: one (set,slice), full
-    vev_success_rate: float       # verified / target (Table 2's success %)
-    detected_ways: Optional[int]  # Table 3 (== CAT allocation when cat)
-    # VCOL
-    n_colors: int
-    vcol_accuracy: float          # Table 4 / §6.2 (1.0 == paper's "100%")
-    # VSCAN
-    vscan_sets: int
-    vscan_idle_rate: float        # %-lines/ms, quiesced
-    vscan_contended_rate: float   # %-lines/ms, under contention
-    # CAS / CAP
-    cas_tiers: Dict[int, int]     # committed per-domain tier after contention
-    cap_allocated: int
-    cap_rollovers: int
-    # cost accounting
-    dispatches: int               # jitted probe dispatches issued
+    """Per-scenario result of one :func:`run_cachex` execution.
+
+    Every column of the benchmark CSV comes from a field here, so units are
+    documented per field (docs/EXPERIMENTS.md maps fields to paper tables).
+    """
+
+    platform: str                 # CachePlatform.name (registry key)
+    provisioning: str             # dedicated | cat | slice | shared
+    # VEV (paper §3.1, Tables 2-3)
+    vev_target_sets: int          # minimal eviction sets requested
+    vev_built_sets: int           # sets the construction pipeline returned
+    vev_verified_sets: int        # hypercall-validated: every line congruent
+    #                               in ONE (set, slice) and |set| == ways
+    vev_success_rate: float       # verified / target, in [0, 1] (Table 2 %)
+    detected_ways: Optional[int]  # probed associativity; equals the CAT
+    #                               allocation under way-partitioning (Table 3)
+    # VCOL (paper §3.2, Table 4)
+    n_colors: int                 # virtual colors built (L2 page colors)
+    vcol_accuracy: float          # fraction of pages whose virtual color is
+    #                               consistent with host truth up to label
+    #                               permutation, in [0, 1] (§6.2's "100%")
+    # VSCAN (paper §3.3) — rates are % of a monitored set's lines evicted
+    # per millisecond of wait window (EWMA-smoothed), averaged over sets
+    vscan_sets: int               # monitored sets built (f per partition)
+    vscan_idle_rate: float        # %-lines/ms with co-tenants quiesced
+    vscan_contended_rate: float   # %-lines/ms under the platform noise + a
+    #                               polluter burst (must exceed idle)
+    # CAS / CAP (paper §4)
+    cas_tiers: Dict[int, int]     # committed tier per LLC domain after the
+    #                               contention phase (0 = least contended)
+    cap_allocated: int            # page-cache pages served from colored lists
+    cap_rollovers: int            # times allocation moved to the next color
+    # cost accounting (hardware-independent work measures)
+    dispatches: int               # jitted probe dispatches issued by the VM:
+    #                               each untimed/timed/batched access-stream
+    #                               call counts 1 (GuestVM.stat_passes)
     accesses: int                 # simulated memory accesses issued
-    wall_s: float
+    #                               (GuestVM.stat_accesses)
+    wall_s: float                 # host wall-clock seconds for the scenario
 
     def row(self) -> str:
         """One CSV-ish summary row (benchmark harness contract)."""
@@ -74,6 +90,49 @@ def _verify_llc_set(vm, es) -> bool:
     return len(keys) == 1
 
 
+# -- shared pipeline stages (run_cachex + the fleet simulator) ----------------
+
+def build_color_stage(vm, plat: CachePlatform, seed: int,
+                      use_batch: bool = True):
+    """VCOL stage: build the platform's L2 color filters.  Returns
+    ``(vcol, cf)``; shared verbatim between :func:`run_cachex` and
+    `repro.core.fleet` so both drive the identical probing pipeline."""
+    vcol = VCOL(vm, vev=VEV(vm, votes=plat.votes, prime_reps=plat.prime_reps,
+                            use_batch=use_batch))
+    cf = vcol.build_color_filters(n_colors=plat.n_l2_colors,
+                                  ways=plat.l2.n_ways, seed=seed)
+    return vcol, cf
+
+
+def build_vscan_stage(vm, plat: CachePlatform, vcol, cf, seed: int,
+                      use_batch: bool = True, f: int = 2, offsets=(0,),
+                      domain_vcpus: Optional[Dict[int, List[int]]] = None,
+                      pool_pages=None, prune_conflicts: bool = False):
+    """VSCAN stage: allocate a probing pool and build the monitored-set
+    list, one constructor vCPU per LLC domain.  Returns
+    ``(vscan, build_info, domain_vcpus)``.
+
+    ``prune_conflicts`` runs :meth:`VScan.prune_self_conflicts` after
+    construction (drops monitored sets that VSCAN's own priming evicts on
+    few-row geometries; the fleet simulator needs honest per-domain rates,
+    while `run_cachex` keeps the raw set list for its coverage metrics)."""
+    if domain_vcpus is None:
+        domain_vcpus = {d: [d * plat.cores_per_domain]
+                        for d in range(plat.n_domains)}
+    ways = plat.effective_ways
+    if pool_pages is None:
+        pool_pages = vm.alloc_pages(
+            min(ways * plat.n_llc_rows_per_offset * plat.llc.n_slices * 3,
+                384))
+    vs, info = VScan.build(vm, cf, vcol, pool_pages, ways=ways, f=f,
+                           offsets=list(offsets), domain_vcpus=domain_vcpus,
+                           votes=plat.votes, prime_reps=plat.prime_reps,
+                           seed=seed, use_batch=use_batch)
+    if prune_conflicts:
+        info["pruned_self_conflicts"] = vs.prune_self_conflicts()
+    return vs, info, domain_vcpus
+
+
 def run_cachex(platform: Union[str, CachePlatform], seed: int = 0,
                use_batch: bool = True,
                monitor_intervals: int = 3) -> CacheXReport:
@@ -83,10 +142,7 @@ def run_cachex(platform: Union[str, CachePlatform], seed: int = 0,
     t0 = time.perf_counter()
 
     # ---- VCOL: color filters + virtual-color accuracy (§3.2) --------------
-    vcol = VCOL(vm, vev=VEV(vm, votes=plat.votes, prime_reps=plat.prime_reps,
-                            use_batch=use_batch))
-    cf = vcol.build_color_filters(n_colors=plat.n_l2_colors,
-                                  ways=plat.l2.n_ways, seed=seed)
+    vcol, cf = build_color_stage(vm, plat, seed, use_batch=use_batch)
     check_pages = vm.alloc_pages(16 * max(1, cf.n_colors))
     colors = vcol.identify_colors_parallel(cf, check_pages)
     vcol_acc = (color_accuracy(vm, check_pages, colors, plat.n_l2_colors)
@@ -114,14 +170,8 @@ def run_cachex(platform: Union[str, CachePlatform], seed: int = 0,
     detected = vev.probe_associativity(assoc_pool, "llc", seed=seed)
 
     # ---- VSCAN: windowed Prime+Probe monitoring (§3.3) --------------------
-    domain_vcpus = {d: [d * plat.cores_per_domain]
-                    for d in range(plat.n_domains)}
-    vs_pool = vm.alloc_pages(
-        min(ways * plat.n_llc_rows_per_offset * plat.llc.n_slices * 3, 384))
-    vs, _ = VScan.build(vm, cf, vcol, vs_pool, ways=ways, f=2, offsets=[0],
-                        domain_vcpus=domain_vcpus, votes=plat.votes,
-                        prime_reps=plat.prime_reps,
-                        seed=seed, use_batch=use_batch)
+    vs, _, domain_vcpus = build_vscan_stage(vm, plat, vcol, cf, seed,
+                                            use_batch=use_batch)
     for wl in host.cotenants:        # quiesce for the idle baseline
         wl.enabled = False
     idle = np.mean([vs.monitor_once().rate.mean()

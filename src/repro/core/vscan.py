@@ -144,19 +144,20 @@ class VScan:
         return float(np.median([len(m.es) for m in self.monitored]))
 
     # -- one monitoring interval -----------------------------------------------
-    def monitor_once(self) -> VScanSnapshot:
-        """Prime -> wait(window) -> probe (reverse order, timed)."""
+    def _by_prober(self) -> Dict[int, List[int]]:
         by_prober: Dict[int, List[int]] = {}
         for i, m in enumerate(self.monitored):
             by_prober.setdefault(m.vcpu, []).append(i)
+        return by_prober
 
-        # Prime: each thread pair traverses its share with MLP batching.
+    def _prime(self, by_prober: Dict[int, List[int]]) -> None:
+        """Each thread pair traverses its share with MLP batching."""
         for vcpu, idxs in by_prober.items():
             lines = np.concatenate([self.monitored[i].es.gvas for i in idxs])
             self.vm.access(lines, vcpu=vcpu)
 
-        self.vm.wait_ms(self.window_ms)
-
+    def _probe(self, by_prober: Dict[int, List[int]]) -> np.ndarray:
+        """Per-set evicted-line fraction (reverse-order timed probe)."""
         frac = np.zeros(len(self.monitored))
         if self.use_batch and self.monitored:
             # one fused dispatch probes every monitored set (its own lane,
@@ -175,6 +176,38 @@ class VScan:
                     self.vm.warm_timer()
                     lats = self.vm.timed_access(gvas, vcpu=vcpu)
                     frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
+        return frac
+
+    def prune_self_conflicts(self, max_frac: float = 0.5) -> int:
+        """Drop monitored sets that VSCAN's *own priming* evicts.
+
+        Zero-wait prime -> probe: with no window for co-tenant traffic, any
+        set showing evictions is being thrashed by another monitored set
+        sharing its (set, slice) cell — which happens when the LLC exposes
+        fewer set-index rows than there are virtual colors (e.g. a small
+        CCX LLC: 128 sets = 2 rows for 4 colors), so two colors' minimal
+        sets land congruent and 2x`ways` lines fight over `ways` ways.
+        The later-primed set of each conflicting pair survives and keeps
+        the shared cell covered.  Purely guest-side (no hypercall), run
+        once after construction.  Returns the number of sets dropped."""
+        if not self.monitored:
+            return 0
+        by_prober = self._by_prober()
+        self._prime(by_prober)
+        frac = self._probe(by_prober)
+        keep = frac <= max_frac
+        dropped = int((~keep).sum())
+        if dropped:
+            self.monitored = [m for m, k in zip(self.monitored, keep) if k]
+            self.ewma = self.ewma[keep]
+        return dropped
+
+    def monitor_once(self) -> VScanSnapshot:
+        """Prime -> wait(window) -> probe (reverse order, timed)."""
+        by_prober = self._by_prober()
+        self._prime(by_prober)
+        self.vm.wait_ms(self.window_ms)
+        frac = self._probe(by_prober)
 
         rate = 100.0 * frac / max(self.window_ms, 1e-9)     # % lines / ms
         self.ewma = (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * rate

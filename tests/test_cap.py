@@ -51,6 +51,39 @@ def test_recolor_requires_three_intervals():
     assert cap.page_color[cap.allocate()] == 2
 
 
+def test_pressure_reclaim_is_not_a_recolor_event():
+    """Regression: `reclaim_all()` is also the memory-pressure path, so it
+    must not count as an adaptive recoloring — only `step_interval`'s
+    3-interval commit does (both bump the reason-agnostic `reclaims`)."""
+    cap = CapAllocator(_lists())
+    for _ in range(5):
+        cap.allocate()
+    dropped = cap.reclaim_all()                 # memory pressure
+    assert len(dropped) == 5
+    assert cap.stats.recolor_events == 0
+    assert cap.stats.reclaims == 1
+    hot0 = {0: 9.0, 1: 0.1, 2: 0.1, 3: 0.1}
+    hot2 = {0: 0.1, 1: 0.1, 2: 9.0, 3: 0.1}
+    for _ in range(3):
+        cap.step_interval(hot0)                 # confirms the initial hottest
+    for _ in range(3):
+        cap.step_interval(hot2)                 # genuine recolor on the 3rd
+    assert cap.stats.recolor_events == 1
+    assert cap.stats.reclaims == 2
+
+
+def test_unmeasured_colors_allocatable_last():
+    """Colors with no contention measurement (e.g. monitored sets pruned on
+    few-row geometries) still allocate — after every ranked color."""
+    cap = CapAllocator(_lists())
+    for _ in range(3):
+        cap.step_interval({2: 9.0, 3: 0.1})     # colors 0/1 never measured
+    pages = [cap.allocate() for _ in range(32)]
+    assert all(p is not None for p in pages)
+    assert cap.page_color[pages[0]] == 2        # measured-hottest first
+    assert {cap.page_color[p] for p in pages} == {0, 1, 2, 3}
+
+
 def test_exhaustion_falls_back():
     cap = CapAllocator({0: [1], 1: []}, use_contention=False)
     assert cap.allocate() == 1

@@ -35,6 +35,46 @@ def test_property_tier_stable_under_transients(rates, flips):
         assert tt.tier[0] == committed
 
 
+def test_hysteresis_direction_flip_resets_streak():
+    """A streak must be *consecutive in one direction*: a single deviating
+    interval in the other direction restarts the count (§4.1)."""
+    tt = TierTracker(keys=[0], thresholds=[1.0, 4.0])
+    for _ in range(3):
+        tt.update({0: 2.0})                   # commit tier 1
+    assert tt.tier[0] == 1
+    tt.update({0: 9.0})                       # up x2 ...
+    tt.update({0: 9.0})
+    tt.update({0: 0.1})                       # ... flip down: streak resets
+    assert tt.tier[0] == 1
+    tt.update({0: 9.0})                       # up x2 again: still no commit
+    tt.update({0: 9.0})
+    assert tt.tier[0] == 1
+    tt.update({0: 9.0})                       # 3rd consecutive up: commit
+    assert tt.tier[0] == 2
+
+
+def test_tier_threshold_boundary_is_exclusive():
+    """Tier boundaries are strict `<`: a rate exactly on a threshold falls
+    in the *higher* (more contended) tier."""
+    on = TierTracker(keys=[0], thresholds=[1.0])
+    under = TierTracker(keys=[0], thresholds=[1.0])
+    for _ in range(3):
+        on.update({0: 1.0})
+        under.update({0: 1.0 - 1e-9})
+    assert on.tier[0] == 1
+    assert under.tier[0] == 0
+
+
+def test_allow_pull_saturation_boundary():
+    """The load-balance guard opens exactly at the saturation threshold
+    (`>=`), not above it."""
+    tiers = {0: 0, 1: 1}
+    assert not allow_pull(0, 1, tiers, src_utilization=0.9 - 1e-9)
+    assert allow_pull(0, 1, tiers, src_utilization=0.9)
+    assert allow_pull(0, 1, tiers, src_utilization=0.5, saturation=0.5)
+    assert not allow_pull(0, 1, tiers, src_utilization=0.49, saturation=0.5)
+
+
 def test_select_vcpu_prefers_quiet_domain_over_affinity():
     vcpu_domain = {0: 0, 1: 0, 2: 1, 3: 1}
     tiers = {0: 2, 1: 0}                        # domain 0 polluted

@@ -87,6 +87,31 @@ def test_per_color_aggregation_flags_poisoned_zone():
     assert rates[0] > 3 * (sorted(rates.values())[-2] + 1e-9)
 
 
+def test_prune_self_conflicts_on_few_row_geometry():
+    """A 128-set LLC exposes only 2 set-index rows for 4 virtual colors, so
+    color pairs share a row and VSCAN's own priming evicts the earlier-
+    primed set of each pair; `prune_self_conflicts` (zero-wait prime->probe,
+    guest-side only) drops them, leaving a quiet idle baseline."""
+    from repro.core.cachesim import CacheGeometry
+    host, vm = make_vm(mapping="fragmented", seed=37,
+                       llc=CacheGeometry(n_sets=128, n_ways=16, n_slices=1))
+    vcol = VCOL(vm)
+    cf = vcol.build_color_filters(n_colors=N_COLORS, ways=8, seed=37)
+    pool_pages = vm.alloc_pages(384)
+    vs, _ = VScan.build(vm, cf, vcol, pool_pages, ways=16, f=1,
+                        offsets=[0], domain_vcpus={0: [0]}, seed=38)
+    before = len(vs.monitored)
+    assert before >= 3                       # at least 2 colors per row
+    polluted_idle = vs.monitor_once().eviction_frac.mean()
+    assert polluted_idle > 0.2               # self-conflict looks like load
+    dropped = vs.prune_self_conflicts()
+    assert dropped >= 1
+    assert len(vs.monitored) == before - dropped
+    assert len(vs.ewma) == len(vs.monitored)
+    clean_idle = vs.monitor_once().eviction_frac.mean()
+    assert clean_idle <= 0.05                # honest idle baseline
+
+
 def test_window_autoshrink_and_reset(vscan_setup):
     host, vm, vs, info = vscan_setup
     default = vs.default_window_ms
