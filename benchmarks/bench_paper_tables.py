@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_vm, emit, timer
+from benchmarks.common import bench_vm, emit, timer, write_report_csv
 from repro.core.cachesim import CacheGeometry, MachineGeometry
 from repro.core.cap import CapAllocator
 from repro.core.cas import MiniSched, SimTask, TierTracker
@@ -258,12 +258,16 @@ def bench_fig12_overhead():
 
 
 def bench_scenario_matrix():
-    """run_cachex across every registered CachePlatform: the paper's thesis
-    (one guest-side stack, any provisioning) quantified per scenario."""
+    """run_cachex (session-backed) across every registered CachePlatform:
+    the paper's thesis (one guest-side stack, any provisioning) quantified
+    per scenario.  The full reports also land in a headered CSV whose
+    columns come straight from the CacheXReport dataclass fields."""
     from repro.core.platforms import list_platforms
     from repro.core.runner import run_cachex
+    reports = []
     for name in list_platforms():
         r = run_cachex(name, seed=41, monitor_intervals=2)
+        reports.append(r)
         emit(f"matrix.{name}", r.wall_s * 1e6,
              f"provisioning={r.provisioning};"
              f"vev_success={100 * r.vev_success_rate:.0f}%;"
@@ -273,6 +277,8 @@ def bench_scenario_matrix():
              f"idle_rate={r.vscan_idle_rate:.2f};"
              f"hot_rate={r.vscan_contended_rate:.2f};"
              f"dispatches={r.dispatches};accesses={r.accesses}")
+    path = write_report_csv("bench-matrix-report.csv", reports)
+    emit("matrix.report_csv", 0.0, f"path={path};rows={len(reports)}")
 
 
 def bench_fleet():
@@ -310,6 +316,8 @@ def bench_fleet():
              f"cas_vs_eevdf={100 * row['cas_vs_eevdf']:.1f}%;"
              f"cas_vs_rusty={100 * row['cas_vs_rusty']:.1f}%;"
              f"cap_on_vs_off={100 * row['cap_on_vs_off']:.1f}%")
+    path = write_report_csv("bench-fleet-report.csv", reports)
+    emit("fleet.report_csv", 0.0, f"path={path};rows={len(reports)}")
     emit("fleet.matrix_wall", t["us"],
          f"runs={len(reports)};seeds={len(seeds)}")
 

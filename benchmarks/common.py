@@ -32,6 +32,19 @@ def timer():
     t["us"] = t["s"] * 1e6
 
 
+def write_report_csv(path: str, reports) -> str:
+    """Write a headered machine-readable CSV for a list of report
+    dataclasses (CacheXReport / FleetReport).  Header and columns come
+    straight from ``dataclasses.fields`` via the report's
+    ``csv_header``/``csv_row`` contract, so they cannot drift from the
+    dataclass.  Returns the path for the caller's `emit` row."""
+    with open(path, "w") as f:
+        f.write(type(reports[0]).csv_header() + "\n")
+        for r in reports:
+            f.write(r.csv_row() + "\n")
+    return path
+
+
 def bench_vm(n_domains=1, cores_per_domain=2, mapping="fragmented", seed=0,
              n_guest_pages=1 << 13, replacement="lru"):
     geom = MachineGeometry(

@@ -2,10 +2,11 @@
 
 Co-runs the Fig 10-style fleet (a cache-sensitive task, a page-cache
 streamer, a bursty batch task) on every registered platform under three
-scheduling policies, with the CAS/CAP decisions driven purely by VSCAN's
-*measured* eviction rates — the paper's probe→decide→act→measure loop
-(`repro.core.fleet`).  Prints the Fig 10 domain-residency table and the
-Table 7/8-style speedup deltas.
+scheduling policies.  The CAS/CAP decisions ride `CacheXSession`
+subscriptions: every `refresh()` publishes the *measured* per-domain /
+per-color eviction rates to the subscribed TierTracker and CapAllocator —
+the paper's probe→decide→act→measure loop (`repro.core.fleet`).  Prints
+the Fig 10 domain-residency table and the Table 7/8-style speedup deltas.
 
     PYTHONPATH=src python examples/fleet_sim.py
     PYTHONPATH=src python examples/fleet_sim.py skylake_sp milan_ccx

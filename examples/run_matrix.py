@@ -1,31 +1,43 @@
 """Scenario-matrix demo: the same CacheX stack vs every provisioning.
 
-Runs the full VEV -> VCOL -> VSCAN -> CAS/CAP pipeline (`run_cachex`)
-against each registered `CachePlatform` — dedicated, CAT-way-partitioned,
-slice-partitioned and co-tenant-shared LLCs on Skylake-, Ice-Lake- and
-Milan-like geometries — and prints one report row per scenario.  This is
-the paper's thesis in one table: the guest never learns which scenario it
-landed on, yet probes the right abstraction everywhere (the CAT row
-*discovers* its 4-way allocation; the shared row succeeds through noise by
-majority voting).
+Runs the full VEV -> VCOL -> VSCAN -> CAS/CAP pipeline (`run_cachex`, a
+thin report-builder over `CacheXSession`) against each registered
+`CachePlatform` — dedicated, CAT-way-partitioned, slice-partitioned and
+co-tenant-shared LLCs on Skylake-, Ice-Lake- and Milan-like geometries —
+and prints one report row per scenario.  This is the paper's thesis in one
+table: the guest never learns which scenario it landed on, yet probes the
+right abstraction everywhere (the CAT row *discovers* its 4-way
+allocation; the shared row succeeds through noise by majority voting).
 
-    PYTHONPATH=src python examples/run_matrix.py
+    PYTHONPATH=src python examples/run_matrix.py           # pretty table
+    PYTHONPATH=src python examples/run_matrix.py --csv     # headered CSV
+                                                           # (columns ==
+                                                           # CacheXReport
+                                                           # fields)
 """
 
-from repro.core.platforms import get_platform, list_platforms
-from repro.core.runner import run_cachex
+import sys
+
+from repro.core import CacheXReport, get_platform, list_platforms, run_cachex
 
 HDR = (f"{'platform':18s} {'provisioning':12s} {'vev':>5s} {'ways':>4s} "
        f"{'vcol':>5s} {'idle':>6s} {'hot':>6s} {'disp':>6s} {'wall':>7s}")
 
 
 def main():
-    print("== CacheX across the provisioned-cache scenario matrix ==\n")
-    print(HDR)
-    print("-" * len(HDR))
+    as_csv = "--csv" in sys.argv[1:]
+    if as_csv:
+        print(CacheXReport.csv_header())
+    else:
+        print("== CacheX across the provisioned-cache scenario matrix ==\n")
+        print(HDR)
+        print("-" * len(HDR))
     for name in list_platforms():
         plat = get_platform(name)
         r = run_cachex(name, seed=17, monitor_intervals=2)
+        if as_csv:
+            print(r.csv_row())
+            continue
         ways = (f"{r.detected_ways}/{plat.llc_ways_total}"
                 if plat.provisioning == "cat" else f"{r.detected_ways}")
         print(f"{r.platform:18s} {r.provisioning:12s} "
@@ -33,10 +45,11 @@ def main():
               f"{100 * r.vcol_accuracy:4.0f}% "
               f"{r.vscan_idle_rate:6.2f} {r.vscan_contended_rate:6.2f} "
               f"{r.dispatches:6d} {r.wall_s:6.1f}s")
-    print("\nvev/vcol: hypercall-verified success rates; ways: detected "
-          "(CAT shows allocation/hardware);")
-    print("idle/hot: VSCAN eviction rate (%-lines/ms) quiesced vs under a "
-          "polluter; disp: jitted probe dispatches.")
+    if not as_csv:
+        print("\nvev/vcol: hypercall-verified success rates; ways: detected "
+              "(CAT shows allocation/hardware);")
+        print("idle/hot: VSCAN eviction rate (%-lines/ms) quiesced vs under "
+              "a polluter; disp: jitted probe dispatches.")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,94 @@
 """CacheX core: simulator, scenario matrix, probing stack, policies, drivers.
 
+The stable public surface re-exported here (guarded by the API-snapshot
+test, `tests/test_abstraction.py`) is the session-first API: consumers
+attach a :class:`CacheXSession` to a booted :class:`GuestVM` and query the
+probed abstraction (`topology()` / `colors()` / `contention()`), subscribe
+policies to published contention updates, and persist it with
+`export()`/`import_()` — instead of hand-wiring VEV/VCOL/VSCAN
+constructors (docs/MIGRATION.md maps the old stage helpers to session
+calls).
+
 Module map (data-flow diagram and paper-section ownership in
 docs/ARCHITECTURE.md):
 
-  cachesim    bit-exact L2 + sliced/directory LLC simulator; the batched
-              multi-set probe engine (`access_streams_batched`)
-  host_model  SimHost (hypervisor ground truth) / GuestVM (the only surface
-              probing code may touch) + canned co-tenant traffic generators
-  platforms   CachePlatform registry: the cloud-provisioning scenario matrix
-  eviction    VEV — minimal eviction sets + associativity (§3.1)
-  color       VCOL — virtual page colors + colored free lists (§3.2)
-  vscan       VSCAN — windowed Prime+Probe contention monitoring (§3.3)
-  cas         CAS — contention tiers + placement policies (§4.1)
-  cap         CAP — color-aware page-cache allocation (§4.2)
-  runner      run_cachex: one-shot pipeline per scenario + shared stages
-  fleet       closed-loop fleet simulator: probe→decide→act→measure
-              (Fig 10 / Tables 7-8 analogs via `run_fleet_matrix`)
+  cachesim     bit-exact L2 + sliced/directory LLC simulator; the batched
+               multi-set probe engine (`access_streams_batched`)
+  host_model   SimHost (hypervisor ground truth) / GuestVM (the only surface
+               probing code may touch) + canned co-tenant traffic generators
+  platforms    CachePlatform registry: the cloud-provisioning scenario matrix
+  eviction     VEV — minimal eviction sets + associativity (§3.1)
+  color        VCOL — virtual page colors + colored free lists (§3.2)
+  vscan        VSCAN — windowed Prime+Probe contention monitoring (§3.3)
+  abstraction  CacheXSession — the probed abstraction as a query API
+               (topology/colors/contention + subscribe + export/import)
+  cas          CAS — contention tiers + placement policies (§4.1)
+  cap          CAP — color-aware page-cache allocation (§4.2)
+  runner       run_cachex: one-shot report-builder over a session
+  fleet        closed-loop fleet simulator: probe→decide→act→measure
+               (Fig 10 / Tables 7-8 analogs via `run_fleet_matrix`)
 """
+
+from repro.core.abstraction import (CacheXSession, ColorsView,
+                                    ContentionView, ProbeConfig,
+                                    TopologyView, VSCAN_POOL_CAP_PAGES)
+from repro.core.cap import CapAllocator, CapStats
+from repro.core.cas import (TierTracker, allow_pull, policy_place,
+                            select_vcpu)
+from repro.core.color import VCOL, ColorFilters, color_accuracy
+from repro.core.eviction import VEV, EvictionSet
+from repro.core.fleet import (FleetReport, FleetSim, FleetWorkload,
+                              fig10_summary, run_fleet, run_fleet_matrix,
+                              speedup_summary)
+from repro.core.host_model import CotenantWorkload, GuestVM, SimHost
+from repro.core.platforms import (CachePlatform, all_platforms, get_platform,
+                                  list_platforms, register_platform)
+from repro.core.runner import (CacheXReport, build_color_stage,
+                               build_vscan_stage, dataclass_csv_header,
+                               dataclass_csv_row, run_cachex, run_matrix)
+from repro.core.vscan import MonitoredSet, VScan, theoretical_coverage
+
+__all__ = [
+    "CachePlatform",
+    "CacheXReport",
+    "CacheXSession",
+    "CapAllocator",
+    "CapStats",
+    "ColorFilters",
+    "ColorsView",
+    "ContentionView",
+    "CotenantWorkload",
+    "EvictionSet",
+    "FleetReport",
+    "FleetSim",
+    "FleetWorkload",
+    "GuestVM",
+    "MonitoredSet",
+    "ProbeConfig",
+    "SimHost",
+    "TierTracker",
+    "TopologyView",
+    "VCOL",
+    "VEV",
+    "VSCAN_POOL_CAP_PAGES",
+    "VScan",
+    "all_platforms",
+    "allow_pull",
+    "build_color_stage",
+    "build_vscan_stage",
+    "color_accuracy",
+    "dataclass_csv_header",
+    "dataclass_csv_row",
+    "fig10_summary",
+    "get_platform",
+    "list_platforms",
+    "policy_place",
+    "register_platform",
+    "run_cachex",
+    "run_fleet",
+    "run_fleet_matrix",
+    "run_matrix",
+    "select_vcpu",
+    "speedup_summary",
+    "theoretical_coverage",
+]

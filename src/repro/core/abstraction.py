@@ -1,0 +1,608 @@
+"""CacheXSession — the probed cache abstraction as a first-class query API.
+
+The paper's core artifact is not any single probe but the *abstraction* a
+guest ends up holding — provisioned topology, virtual colors, and live
+per-domain / per-color contention — which in-kernel CacheX exposes as a
+subsystem API that the scheduler (CAS) and the page cache (CAP) consume.
+This module is that API for the reproduction: one :class:`CacheXSession`
+owns the VEV → VCOL → VSCAN probing lifecycle against a
+:class:`~repro.core.platforms.CachePlatform` and serves stable queries, so
+policies, drivers, benchmarks and examples never hand-wire probe
+constructors or thread ``votes``/``prime_reps``/``use_batch`` parameters
+again (the Com-CAS / CacheShield design point: a cache-state interface
+between probing and policy).
+
+Surface:
+
+  * :meth:`CacheXSession.attach` — bind a session to a booted
+    :class:`~repro.core.host_model.GuestVM`; the pipeline runs lazily, one
+    stage per first query (or eagerly with ``eager=True``).
+  * :meth:`~CacheXSession.topology` — LLC domains, guest-effective
+    associativity, probed (detected) associativity, built eviction sets.
+  * :meth:`~CacheXSession.colors` — a :class:`ColorsView`: color filters,
+    per-page virtual-color lookup (cached), colored free lists.
+  * :meth:`~CacheXSession.contention` — latest :class:`ContentionView`
+    (per-domain / per-color EWMA rates) with staleness metadata; re-probes
+    when older than ``ProbeConfig.refresh_interval_ms`` (or an explicit
+    ``max_age_ms``).  :meth:`~CacheXSession.refresh` forces one monitoring
+    interval and publishes the view to :meth:`~CacheXSession.subscribe`
+    hooks — how CAS's ``TierTracker`` and CAP's ``CapAllocator`` consume
+    measurements instead of polling ``VScan`` directly.
+  * :meth:`~CacheXSession.export` / :meth:`~CacheXSession.import_` — the
+    probed abstraction serializes to JSON and re-attaches to a fresh
+    (rebooted) VM without re-running VEV/VCOL/VSCAN construction: the
+    paper's "persists across reboot" story (GPA→HPA backing survives a
+    guest reboot, so guest-page colors and eviction sets stay valid).
+  * :meth:`~CacheXSession.validate` — hypercall ground-truth checks
+    (§6.2); like every ``hypercall_*`` consumer, for tests / benchmarks /
+    report-building only, never for decisions.
+
+:class:`ProbeConfig` replaces the parameter threading: platform defaults
+via :meth:`ProbeConfig.for_platform`, per-call overrides via
+:meth:`ProbeConfig.replace`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.cachesim import PAGE_BITS
+from repro.core.color import VCOL, ColorFilters, color_accuracy
+from repro.core.eviction import C_POOL_SCALE, VEV, EvictionSet, build_many
+from repro.core.host_model import GuestVM
+from repro.core.platforms import CachePlatform, get_platform
+from repro.core.vscan import DEFAULT_WINDOW_MS, VScan
+
+EXPORT_FORMAT = "cachex-abstraction/v1"
+
+#: Upper bound on the VSCAN probing-pool allocation (guest pages).
+#:
+#: Sizing rationale: a pool of ``Ps = W * rows * slices * C`` pages
+#: (§3.1's candidate-pool formula with C = 3 over-provisioning) guarantees
+#: enough congruent lines per (row, slice) cell to build ``f`` monitored
+#: sets per partition with high probability.  384 pages is exactly Ps for
+#: the largest registered geometry (skylake_sp at our scale: 8 ways x 8
+#: rows x 2 slices x 3), i.e. the cap is inactive on every shipped
+#: platform and only binds if a future geometry would demand more — where
+#: extra candidates no longer improve coverage (only ``f`` sets per
+#: partition are kept) but do inflate group-testing cost quadratically and
+#: eat guest memory (384 pages ≈ 4.7% of the default 8192-page guest).
+VSCAN_POOL_CAP_PAGES = 384
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """Every knob of the probing pipeline in one place.
+
+    Platform defaults come from :meth:`for_platform`; per-call overrides
+    via :meth:`replace`.  Field reference:
+
+    ``votes``            majority votes per eviction test (non-LRU /
+                         noisy scenarios; ``CachePlatform.votes``).
+    ``prime_reps``       prime repetitions per test (same rationale).
+    ``use_batch``        route probes through the fused multi-set engine
+                         (False keeps the seed per-test path for benches).
+    ``f``                monitored sets built per (domain, color, offset)
+                         VSCAN partition (paper Table 5 coverage knob).
+    ``offsets``          aligned page offsets VSCAN partitions by.
+    ``vev_target_sets``  minimal LLC eviction sets the topology stage
+                         builds; None → ``min(4, rows * slices)``.
+    ``vscan_pool_pages`` probing-pool size for VSCAN construction; None →
+                         ``min(W * rows * slices * C, vscan_pool_cap)``
+                         (§3.1 Ps sizing, see :data:`VSCAN_POOL_CAP_PAGES`).
+    ``vscan_pool_cap``   the cap applied to the derived pool size.
+    ``prune_self_conflicts``  drop monitored sets thrashed by VSCAN's own
+                         priming after construction (few-row geometries).
+    ``window_ms``        Prime+Probe wait window (auto-adjusted live).
+    ``ewma_alpha``       EWMA smoothing of eviction rates.
+    ``refresh_interval_ms``  staleness bound for
+                         :meth:`CacheXSession.contention`: a view older
+                         than this (simulated ms) triggers a re-probe.
+    ``seed``             scenario seed threaded through every stage.
+    """
+
+    votes: int = 1
+    prime_reps: int = 1
+    use_batch: bool = True
+    f: int = 2
+    offsets: Tuple[int, ...] = (0,)
+    vev_target_sets: Optional[int] = None
+    vscan_pool_pages: Optional[int] = None
+    vscan_pool_cap: int = VSCAN_POOL_CAP_PAGES
+    prune_self_conflicts: bool = False
+    window_ms: float = DEFAULT_WINDOW_MS
+    ewma_alpha: float = 0.3
+    refresh_interval_ms: float = 50.0
+    seed: int = 0
+
+    @classmethod
+    def for_platform(cls, plat: Union[str, CachePlatform],
+                     **overrides) -> "ProbeConfig":
+        """Platform defaults (votes/prime_reps/pool sizing), overridable."""
+        plat = get_platform(plat) if isinstance(plat, str) else plat
+        kw = dict(votes=plat.votes, prime_reps=plat.prime_reps)
+        kw.update(overrides)
+        cfg = cls(**kw)
+        if cfg.vscan_pool_pages is None:
+            cfg = cfg.replace(vscan_pool_pages=cfg.derive_vscan_pool(plat))
+        return cfg
+
+    def replace(self, **overrides) -> "ProbeConfig":
+        return dataclasses.replace(self, **overrides)
+
+    # -- derived sizes -------------------------------------------------------
+    def derive_vscan_pool(self, plat: CachePlatform) -> int:
+        """§3.1 Ps pool sizing, capped (see :data:`VSCAN_POOL_CAP_PAGES`)."""
+        ps = (plat.effective_ways * plat.n_llc_rows_per_offset
+              * plat.llc.n_slices * C_POOL_SCALE)
+        return min(ps, self.vscan_pool_cap)
+
+    def resolve_vev_targets(self, plat: CachePlatform) -> int:
+        if self.vev_target_sets is not None:
+            return self.vev_target_sets
+        return min(4, plat.n_llc_rows_per_offset * plat.llc.n_slices)
+
+
+# ---------------------------------------------------------------------------
+# query views
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologyView:
+    """What the session knows about the provisioned cache topology.
+
+    ``effective_ways`` is the guest-effective LLC associativity the
+    pipeline built against; ``detected_associativity`` is what the probe
+    actually measured (equal on success — under CAT it is the *allocation*,
+    paper Table 3).  ``vev_built_sets`` of ``vev_target_sets`` minimal LLC
+    eviction sets were constructed (hypercall verification of those sets
+    is report-building, not a session query — see
+    :meth:`CacheXSession.validate`).
+    """
+
+    n_domains: int
+    cores_per_domain: int
+    domain_vcpus: Dict[int, List[int]]
+    effective_ways: int
+    detected_associativity: Optional[int]
+    vev_target_sets: int
+    vev_built_sets: int
+
+
+class ColorsView:
+    """Virtual-color queries bound to a session (paper §3.2).
+
+    ``color_of``/``colors_of`` identify pages via the session's color
+    filters (answers are cached per page — a page's virtual color is
+    stable while its GPA→HPA backing is); ``build_free_lists`` produces
+    the colored free-page lists CAP allocates from.
+    """
+
+    def __init__(self, session: "CacheXSession"):
+        self._s = session
+
+    @property
+    def n_colors(self) -> int:
+        return self._s._cf.n_colors
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return self._s._cf.offsets
+
+    @property
+    def filters(self) -> ColorFilters:
+        return self._s._cf
+
+    def color_of(self, page: int) -> int:
+        return int(self.colors_of([page])[0])
+
+    def colors_of(self, pages: Sequence[int]) -> np.ndarray:
+        return self._s._colors_of(pages)
+
+    def build_free_lists(self, pages: Sequence[int]) -> Dict[int, List[int]]:
+        return self._s._build_free_lists(pages)
+
+    def known_pages(self) -> Dict[int, int]:
+        """Snapshot of the cached page → virtual-color map."""
+        return dict(self._s._page_colors)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentionView:
+    """One monitoring interval's published contention measurements.
+
+    ``per_domain``/``per_color`` are EWMA eviction rates (%-lines/ms, the
+    VSCAN scale); ``mean_rate`` is this interval's *instantaneous* mean
+    rate across monitored sets (what `run_cachex` reports as idle/hot).
+    ``measured_at_ms`` (simulated clock) + :meth:`age_ms` are the staleness
+    metadata; ``interval`` counts refreshes since attach.
+    """
+
+    per_domain: Dict[int, float]
+    per_color: Dict[int, float]
+    mean_rate: float
+    window_ms: float
+    measured_at_ms: float
+    interval: int
+
+    def age_ms(self, now_ms: float) -> float:
+        return now_ms - self.measured_at_ms
+
+
+# ---------------------------------------------------------------------------
+# stage builders (shared by the session and the deprecated runner shims)
+# ---------------------------------------------------------------------------
+
+def _build_colors(vm: GuestVM, plat: CachePlatform,
+                  cfg: ProbeConfig) -> Tuple[VCOL, ColorFilters]:
+    """VCOL stage: build the platform's L2 color filters."""
+    vcol = VCOL(vm, vev=VEV(vm, votes=cfg.votes, prime_reps=cfg.prime_reps,
+                            use_batch=cfg.use_batch))
+    cf = vcol.build_color_filters(n_colors=plat.n_l2_colors,
+                                  ways=plat.l2.n_ways, seed=cfg.seed)
+    return vcol, cf
+
+
+def _default_domain_vcpus(plat: CachePlatform) -> Dict[int, List[int]]:
+    """One constructor vCPU per LLC domain (VTOP-placed)."""
+    return {d: [d * plat.cores_per_domain] for d in range(plat.n_domains)}
+
+
+def _build_vscan(vm: GuestVM, plat: CachePlatform, vcol: VCOL,
+                 cf: ColorFilters, cfg: ProbeConfig,
+                 domain_vcpus: Optional[Dict[int, List[int]]] = None,
+                 pool_pages: Optional[np.ndarray] = None
+                 ) -> Tuple[VScan, Dict, Dict[int, List[int]]]:
+    """VSCAN stage: allocate the probing pool (ProbeConfig-sized) and build
+    the monitored-set list, one constructor vCPU per LLC domain."""
+    if domain_vcpus is None:
+        domain_vcpus = _default_domain_vcpus(plat)
+    if pool_pages is None:
+        n_pool = cfg.vscan_pool_pages
+        if n_pool is None:
+            n_pool = cfg.derive_vscan_pool(plat)
+        pool_pages = vm.alloc_pages(n_pool)
+    vs, info = VScan.build(vm, cf, vcol, pool_pages,
+                           ways=plat.effective_ways, f=cfg.f,
+                           offsets=list(cfg.offsets),
+                           domain_vcpus=domain_vcpus, votes=cfg.votes,
+                           prime_reps=cfg.prime_reps, seed=cfg.seed,
+                           window_ms=cfg.window_ms,
+                           ewma_alpha=cfg.ewma_alpha,
+                           use_batch=cfg.use_batch)
+    if cfg.prune_self_conflicts:
+        info["pruned_self_conflicts"] = vs.prune_self_conflicts()
+    return vs, info, domain_vcpus
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+class CacheXSession:
+    """Facade over the probing lifecycle of one VM on one platform.
+
+    Construct via :meth:`attach` (probe) or :meth:`import_` (restore a
+    previously exported abstraction).  Stages run at most once, lazily:
+
+      * :meth:`colors` → VCOL color filters,
+      * :meth:`topology` → VEV minimal LLC sets + associativity probe,
+      * :meth:`contention` / :meth:`refresh` / :meth:`monitored_sets` →
+        VSCAN monitored-set construction (which itself needs colors).
+    """
+
+    def __init__(self, vm: GuestVM, platform: Union[str, CachePlatform],
+                 config: Optional[ProbeConfig] = None):
+        self.vm = vm
+        self.platform = (get_platform(platform) if isinstance(platform, str)
+                         else platform)
+        self.config = config or ProbeConfig.for_platform(self.platform)
+        # VCOL
+        self._vcol: Optional[VCOL] = None
+        self._cf: Optional[ColorFilters] = None
+        self._page_colors: Dict[int, int] = {}
+        self._free_lists: Dict[int, List[int]] = {}
+        # VEV / topology
+        self._topo_ready = False
+        self._llc_sets: List[EvictionSet] = []
+        self._detected: Optional[int] = None
+        self._domain_vcpus: Optional[Dict[int, List[int]]] = None
+        # VSCAN / contention
+        self._vs: Optional[VScan] = None
+        self.vscan_info: Dict = {}
+        self._last: Optional[ContentionView] = None
+        self._intervals = 0
+        self._subs: Dict[int, Callable[[ContentionView], None]] = {}
+        self._next_sub = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    @classmethod
+    def attach(cls, vm: GuestVM, platform: Union[str, CachePlatform],
+               config: Optional[ProbeConfig] = None,
+               eager: bool = False) -> "CacheXSession":
+        """Bind a session to a booted VM.  ``eager=True`` runs the whole
+        VEV→VCOL→VSCAN pipeline now; the default probes lazily on first
+        query (each stage still runs at most once)."""
+        session = cls(vm, platform, config)
+        if eager:
+            session.colors()
+            session.topology()
+            session.monitored_sets()
+        return session
+
+    # -- stage ensures -------------------------------------------------------
+    def _ensure_colors(self) -> None:
+        if self._cf is None:
+            self._vcol, self._cf = _build_colors(self.vm, self.platform,
+                                                 self.config)
+
+    def _ensure_topology(self) -> None:
+        if self._topo_ready:
+            return
+        plat, cfg, vm = self.platform, self.config, self.vm
+        vev = VEV(vm, votes=cfg.votes, prime_reps=cfg.prime_reps,
+                  use_batch=cfg.use_batch)
+        ways = plat.effective_ways
+        target = cfg.resolve_vev_targets(plat)
+        pool = vev.make_pool(0, ways=ways,
+                             n_uncontrollable_rows=plat.n_llc_rows_per_offset,
+                             n_slices=plat.llc.n_slices)
+        results, _, _ = build_many(
+            vm, [{"offset": 0, "pool": pool, "max_sets": target}],
+            "llc", ways, votes=cfg.votes, seed=cfg.seed,
+            use_batch=cfg.use_batch, prime_reps=cfg.prime_reps)
+        self._llc_sets = results[0]
+        assoc_pool = vev.make_pool(
+            64, ways=ways, n_uncontrollable_rows=plat.n_llc_rows_per_offset,
+            n_slices=plat.llc.n_slices)
+        self._detected = vev.probe_associativity(assoc_pool, "llc",
+                                                 seed=cfg.seed)
+        self._topo_ready = True
+
+    def _ensure_vscan(self) -> None:
+        if self._vs is not None:
+            return
+        self._ensure_colors()
+        self._vs, self.vscan_info, self._domain_vcpus = _build_vscan(
+            self.vm, self.platform, self._vcol, self._cf, self.config,
+            domain_vcpus=self._domain_vcpus)
+
+    # -- queries -------------------------------------------------------------
+    def topology(self) -> TopologyView:
+        """Domains / effective ways / detected associativity (probes the
+        VEV stage on first call)."""
+        self._ensure_topology()
+        plat = self.platform
+        return TopologyView(
+            n_domains=plat.n_domains,
+            cores_per_domain=plat.cores_per_domain,
+            domain_vcpus={d: list(v) for d, v in self.domain_vcpus().items()},
+            effective_ways=plat.effective_ways,
+            detected_associativity=self._detected,
+            vev_target_sets=self.config.resolve_vev_targets(plat),
+            vev_built_sets=len(self._llc_sets))
+
+    def domain_vcpus(self) -> Dict[int, List[int]]:
+        if self._domain_vcpus is None:
+            self._domain_vcpus = _default_domain_vcpus(self.platform)
+        return self._domain_vcpus
+
+    def colors(self) -> ColorsView:
+        """Virtual-color queries (builds the VCOL filters on first call)."""
+        self._ensure_colors()
+        return ColorsView(self)
+
+    def llc_sets(self) -> List[EvictionSet]:
+        """Minimal LLC eviction sets built by the topology stage."""
+        self._ensure_topology()
+        return list(self._llc_sets)
+
+    def monitored_sets(self):
+        """VSCAN's monitored-set list (builds the VSCAN stage on first
+        call).  Read-only metadata for experiment harnesses; mutating it
+        desynchronizes the monitor."""
+        self._ensure_vscan()
+        return list(self._vs.monitored)
+
+    def contention(self, max_age_ms: Optional[float] = None) -> ContentionView:
+        """Latest contention view, re-probing when stale.
+
+        ``max_age_ms=None`` uses ``config.refresh_interval_ms`` (the
+        interval-driven re-probe); ``float("inf")`` never re-probes (pure
+        read of the last published view, probing once only if no interval
+        has ever run)."""
+        self._ensure_vscan()
+        if self._last is None:
+            return self.refresh()
+        limit = (self.config.refresh_interval_ms
+                 if max_age_ms is None else max_age_ms)
+        if self._last.age_ms(self.vm.host.time_ms) > limit:
+            return self.refresh()
+        return self._last
+
+    def refresh(self) -> ContentionView:
+        """Run one monitoring interval now and publish it to subscribers."""
+        self._ensure_vscan()
+        snap = self._vs.monitor_once()
+        self._intervals += 1
+        view = ContentionView(
+            per_domain=self._vs.per_domain_rate(),
+            per_color=self._vs.per_color_rate(),
+            mean_rate=float(snap.rate.mean()) if len(snap.rate) else 0.0,
+            window_ms=snap.window_ms,
+            measured_at_ms=snap.time_ms,
+            interval=self._intervals)
+        self._last = view
+        for fn in list(self._subs.values()):
+            fn(view)
+        return view
+
+    def subscribe(self, fn: Callable[[ContentionView], None],
+                  replay: bool = False) -> int:
+        """Register a contention consumer; called (in subscription order)
+        with every published :class:`ContentionView`.  ``replay=True``
+        immediately delivers the last view, if any.  Returns a token for
+        :meth:`unsubscribe`."""
+        sid = self._next_sub
+        self._next_sub += 1
+        self._subs[sid] = fn
+        if replay and self._last is not None:
+            fn(self._last)
+        return sid
+
+    def unsubscribe(self, token: int) -> None:
+        self._subs.pop(token, None)
+
+    # -- persistence ---------------------------------------------------------
+    def export(self) -> Dict:
+        """JSON-serializable snapshot of every stage probed so far."""
+        cfg = dataclasses.asdict(self.config)
+        cfg["offsets"] = list(cfg["offsets"])
+        data: Dict = {"format": EXPORT_FORMAT,
+                      "platform": self.platform.name, "config": cfg}
+        if self._cf is not None:
+            data["colors"] = {
+                "filters": self._cf.state_dict(),
+                "page_colors": {str(p): c
+                                for p, c in self._page_colors.items()},
+                "free_lists": {str(c): list(v)
+                               for c, v in self._free_lists.items()},
+            }
+        if self._topo_ready:
+            data["topology"] = {
+                "detected_associativity": self._detected,
+                "llc_sets": [es.state_dict() for es in self._llc_sets],
+                "domain_vcpus": {str(d): list(v)
+                                 for d, v in self.domain_vcpus().items()},
+            }
+        if self._vs is not None:
+            data["vscan"] = self._vs.state_dict()
+        return data
+
+    def export_json(self, path: Optional[str] = None) -> str:
+        js = json.dumps(self.export(), indent=1, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(js + "\n")
+        return js
+
+    @classmethod
+    def import_(cls, vm: GuestVM, data: Dict,
+                config: Optional[ProbeConfig] = None) -> "CacheXSession":
+        """Re-attach an exported abstraction to a fresh VM *without
+        re-probing* — valid when the VM's GPA→HPA backing matches the one
+        probed (e.g. :meth:`GuestVM.reboot`: the hypervisor keeps the
+        memory across a guest reboot).  Pages the abstraction references
+        are re-reserved in the guest allocator.  Contention state is live
+        data and starts empty — call :meth:`refresh` to re-measure with
+        the imported monitored sets."""
+        if data.get("format") != EXPORT_FORMAT:
+            raise ValueError(f"not a {EXPORT_FORMAT} export: "
+                             f"{data.get('format')!r}")
+        plat = get_platform(data["platform"])
+        if config is None:
+            kw = dict(data["config"])
+            kw["offsets"] = tuple(kw["offsets"])
+            config = ProbeConfig(**kw)
+        session = cls(vm, plat, config)
+        reserve: set = set()
+        if "colors" in data:
+            sec = data["colors"]
+            session._cf = ColorFilters.from_state(sec["filters"])
+            session._vcol = VCOL(vm, vev=VEV(
+                vm, votes=config.votes, prime_reps=config.prime_reps,
+                use_batch=config.use_batch))
+            session._page_colors = {int(p): int(c)
+                                    for p, c in sec["page_colors"].items()}
+            session._free_lists = {int(c): [int(p) for p in v]
+                                   for c, v in sec["free_lists"].items()}
+            session._vcol.free_lists = session._free_lists
+            for es in session._cf.filters:
+                reserve.update(int(g) >> PAGE_BITS for g in es.gvas)
+            # every page the abstraction knows the color of — including
+            # the colored free lists CAP allocates from — is part of the
+            # imported state and must not be recycled by fresh allocations
+            reserve.update(session._page_colors)
+            for pages in session._free_lists.values():
+                reserve.update(pages)
+        if "topology" in data:
+            sec = data["topology"]
+            session._detected = sec["detected_associativity"]
+            session._llc_sets = [EvictionSet.from_state(s)
+                                 for s in sec["llc_sets"]]
+            session._domain_vcpus = {int(d): [int(v) for v in vs]
+                                     for d, vs in sec["domain_vcpus"].items()}
+            session._topo_ready = True
+            for es in session._llc_sets:
+                reserve.update(int(g) >> PAGE_BITS for g in es.gvas)
+        if "vscan" in data:
+            session._vs = VScan.from_state(vm, data["vscan"],
+                                           use_batch=config.use_batch)
+            for m in session._vs.monitored:
+                reserve.update(int(g) >> PAGE_BITS for g in m.es.gvas)
+        vm.reserve_pages(sorted(reserve))
+        return session
+
+    @classmethod
+    def import_json(cls, vm: GuestVM, js: str,
+                    config: Optional[ProbeConfig] = None) -> "CacheXSession":
+        return cls.import_(vm, json.loads(js), config=config)
+
+    # -- hypercall ground truth (tests / benchmarks / reports ONLY) ----------
+    def validate(self, pages: Optional[Sequence[int]] = None) -> Dict:
+        """Check the abstraction against host ground truth via the
+        validation hypercalls (§6.2).  Never part of a decision path —
+        report-building, tests, and benchmarks only.
+
+        Returns ``vcol_accuracy`` (over ``pages``, default: every cached
+        page), ``vev_built``/``vev_verified`` (sets whose lines are all
+        congruent in one (set, slice) at the effective associativity), and
+        ``ways_match`` (detected == guest-effective associativity)."""
+        vm, plat = self.vm, self.platform
+        out: Dict = {}
+        if self._cf is not None:
+            if pages is None:
+                pages = sorted(self._page_colors)
+            pages = list(pages)
+            if pages:
+                virtual = self._colors_of(pages)
+                out["vcol_accuracy"] = color_accuracy(
+                    vm, pages, virtual, plat.n_l2_colors)
+        if self._topo_ready:
+            ways = plat.effective_ways
+            verified = [
+                es for es in self._llc_sets
+                if len(es) == ways
+                and len({vm.hypercall_llc_setslice(int(g))
+                         for g in es.gvas}) == 1]
+            out["vev_built"] = len(self._llc_sets)
+            out["vev_verified"] = len(verified)
+            out["ways_match"] = self._detected == ways
+        return out
+
+    # -- internals behind ColorsView ----------------------------------------
+    def _colors_of(self, pages: Sequence[int]) -> np.ndarray:
+        self._ensure_colors()
+        pages = np.asarray(pages, np.int64)
+        missing = [int(p) for p in pages if int(p) not in self._page_colors]
+        if missing:
+            got = self._vcol.identify_colors_parallel(
+                self._cf, np.asarray(missing, np.int64))
+            for p, c in zip(missing, got):
+                self._page_colors[int(p)] = int(c)
+        return np.array([self._page_colors[int(p)] for p in pages], np.int64)
+
+    def _build_free_lists(self, pages: Sequence[int]) -> Dict[int, List[int]]:
+        colors = self._colors_of(pages)
+        lists: Dict[int, List[int]] = {c: []
+                                       for c in range(self._cf.n_colors)}
+        for p, c in zip(pages, colors):
+            if int(c) >= 0:
+                lists[int(c)].append(int(p))
+        self._free_lists = lists
+        self._vcol.free_lists = lists
+        return lists

@@ -151,3 +151,10 @@ class CapAllocator:
             self.reclaim_all()
             return True
         return False
+
+    def on_contention(self, view) -> bool:
+        """`CacheXSession.subscribe` hook: consume one published
+        contention update (anything with a ``per_color`` rate dict) as a
+        monitoring interval — the page cache sits on the session's
+        published abstraction instead of polling VScan."""
+        return self.step_interval(view.per_color)

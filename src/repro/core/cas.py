@@ -74,6 +74,13 @@ class TierTracker:
         """Keys ordered best (least contended) first."""
         return sorted(self.tier, key=lambda k: self.tier[k])
 
+    def on_contention(self, view) -> Dict:
+        """`CacheXSession.subscribe` hook: consume one published
+        contention update (anything with a ``per_domain`` rate dict) as a
+        monitoring interval.  The scheduler never polls VScan directly —
+        it sits on the session's published abstraction."""
+        return self.update(view.per_domain)
+
 
 @dataclasses.dataclass
 class PlacementRequest:

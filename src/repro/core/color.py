@@ -56,6 +56,17 @@ class ColorFilters:
     def n_colors(self) -> int:
         return len(self.filters)
 
+    def state_dict(self) -> Dict:
+        """JSON-serializable form (`CacheXSession` export contract)."""
+        return {"offsets": [int(o) for o in self.offsets],
+                "filters": [es.state_dict() for es in self.filters]}
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "ColorFilters":
+        return cls(filters=[EvictionSet.from_state(s)
+                            for s in state["filters"]],
+                   offsets=np.asarray(state["offsets"], np.int64))
+
 
 class VCOL:
     def __init__(self, vm: GuestVM, vev: Optional[VEV] = None, vcpu: int = 0):

@@ -68,6 +68,18 @@ class EvictionSet:
     def __len__(self) -> int:
         return len(self.gvas)
 
+    def state_dict(self) -> Dict:
+        """JSON-serializable form (the `CacheXSession` export contract:
+        GVAs stay valid across guest reboots because the GPA→HPA backing
+        persists)."""
+        return {"gvas": [int(g) for g in self.gvas],
+                "offset": int(self.offset), "level": str(self.level)}
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "EvictionSet":
+        return cls(gvas=np.asarray(state["gvas"], np.int64),
+                   offset=int(state["offset"]), level=str(state["level"]))
+
 
 @dataclasses.dataclass
 class VEVStats:

@@ -6,17 +6,20 @@ abstraction *changes scheduling and page-cache decisions*, and those
 decisions change what the next probe measures.
 
 One :class:`FleetSim` boots a :class:`~repro.core.platforms.CachePlatform`
-(widened to >= 2 LLC domains so placement matters, Fig 10's setup), builds
-the real VCOL + VSCAN probing stack through the same stage builders as
-`run_cachex`, then iterates a genuine probe→decide→act→measure loop:
+(widened to >= 2 LLC domains so placement matters, Fig 10's setup),
+attaches the same :class:`~repro.core.abstraction.CacheXSession` that
+`run_cachex` drives, then iterates a genuine probe→decide→act→measure loop:
 
-  * **probe** — `VScan.monitor_once()` runs a windowed Prime+Probe interval
-    (one fused `access_streams_batched` dispatch over every monitored set);
-    whatever traffic the fleet's own placement routed into each domain
-    during the wait window is what gets measured,
-  * **decide** — the *measured* per-domain rates feed CAS's
-    :class:`~repro.core.cas.TierTracker`; the measured per-color rates feed
-    CAP's :class:`~repro.core.cap.CapAllocator` ranking,
+  * **probe** — `CacheXSession.refresh()` runs a windowed Prime+Probe
+    interval (one fused `access_streams_batched` dispatch over every
+    monitored set); whatever traffic the fleet's own placement routed into
+    each domain during the wait window is what gets measured,
+  * **decide** — the refreshed :class:`~repro.core.abstraction.
+    ContentionView` is *published* to the session's subscribers: CAS's
+    :class:`~repro.core.cas.TierTracker` consumes the measured per-domain
+    rates and CAP's :class:`~repro.core.cap.CapAllocator` the measured
+    per-color ranking (`subscribe()`d hooks — the policies never poll
+    VScan),
   * **act** — each guest workload is (re)placed by the active policy
     (``cas`` | ``rusty`` | ``eevdf`` via :func:`repro.core.cas.policy_place`)
     and its LLC traffic is retargeted into its new domain
@@ -57,13 +60,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.abstraction import CacheXSession, ProbeConfig
 from repro.core.cachesim import BLOCKS_PER_PAGE, LAT_L2
 from repro.core.cap import CapAllocator
 from repro.core.cas import TierTracker, policy_place
 from repro.core.host_model import (CotenantWorkload, congruent_gen,
                                    polluter_gen)
 from repro.core.platforms import CachePlatform, get_platform
-from repro.core.runner import build_color_stage, build_vscan_stage
+from repro.core.runner import dataclass_csv_header, dataclass_csv_row
 
 FLEET_POLICIES = ("eevdf", "rusty", "cas")
 #: (policy, cap) combinations swept by default: the three policies with CAP
@@ -189,14 +193,13 @@ class FleetReport:
     accesses: int
     wall_s: float
 
-    def row(self) -> str:
-        """One CSV-ish summary row (benchmark harness contract)."""
-        return (f"{self.platform},{self.policy},cap={self.cap},"
-                f"thr={self.throughput:.1f},"
-                f"quiet_res={self.quiet_residency:.2f},"
-                f"hot={self.hot_rate:.2f},quiet={self.quiet_rate:.2f},"
-                f"ws_lat={self.ws_lat_cycles:.0f}cyc,"
-                f"recolors={self.recolor_events},wall={self.wall_s:.2f}s")
+    @classmethod
+    def csv_header(cls) -> str:
+        """Headered-CSV contract: columns are exactly the fields above."""
+        return dataclass_csv_header(cls)
+
+    def csv_row(self) -> str:
+        return dataclass_csv_row(self)
 
 
 class FleetSim:
@@ -229,14 +232,18 @@ class FleetSim:
         self.vcpu_domain = {v: c // self.plat.cores_per_domain
                             for v, c in enumerate(self.vm.vcpu_cores)}
 
-        # -- probing stack: identical stages to run_cachex ------------------
-        self.vcol, self.cf = build_color_stage(self.vm, self.plat, seed,
-                                               use_batch=use_batch)
-        self.vs, self.vs_info, self.domain_vcpus = build_vscan_stage(
-            self.vm, self.plat, self.vcol, self.cf, seed,
-            use_batch=use_batch, prune_conflicts=True)
+        # -- probing stack: the same session API run_cachex drives ----------
+        self.session = CacheXSession.attach(
+            self.vm, self.plat,
+            ProbeConfig.for_platform(self.plat, use_batch=use_batch,
+                                     seed=seed, prune_self_conflicts=True))
+        self.colors = self.session.colors()          # VCOL color filters
+        self.session.monitored_sets()                # VSCAN monitor build
+        self.domain_vcpus = self.session.domain_vcpus()
         self.tt = TierTracker(keys=sorted(self.domain_vcpus),
                               thresholds=list(thresholds))
+        # decide-edge consumers ride session publications, never poll VScan
+        self.session.subscribe(self.tt.on_contention)
 
         # -- asymmetric contention (Fig 10): pollute domain 0 ---------------
         llc = self.plat.llc
@@ -284,10 +291,10 @@ class FleetSim:
         stream order, and the congruent-set poisoner that keeps the stream
         target color's monitored sets hot."""
         pool = self.vm.alloc_pages(
-            min(240 * max(1, self.cf.n_colors), 1024))
-        lists = self.vcol.build_free_lists(self.cf, pool)
+            min(240 * max(1, self.colors.n_colors), 1024))
+        lists = self.colors.build_free_lists(pool)
         truths = {c: self._true_color(ps) for c, ps in lists.items() if ps}
-        d0_colors = {m.color for m in self.vs.monitored
+        d0_colors = {m.color for m in self.session.monitored_sets()
                      if m.domain == POLLUTED_DOMAIN}
 
         # stream color P: has monitored sets in the polluted domain (so the
@@ -313,6 +320,8 @@ class FleetSim:
         self.free_lists = lists
         self.cap = CapAllocator({c: list(v) for c, v in lists.items()},
                                 use_contention=True)
+        if self.cap_on:
+            self.session.subscribe(self.cap.on_contention)
         # vanilla order: interleave colors round-robin (the kernel's
         # color-oblivious allocator), truncated to the stream length
         depth = max(len(v) for v in lists.values())
@@ -369,13 +378,11 @@ class FleetSim:
             for task in tasks:
                 self.host.retarget_cotenant(f"fleet:{task.name}",
                                             domain=self.vcpu_domain[task.vcpu])
-            # probe: one windowed Prime+Probe interval over every domain
-            self.vs.monitor_once()
-            dom_rates = self.vs.per_domain_rate()
-            # decide: measured rates drive CAS tiers and CAP's ranking
-            self.tt.update(dom_rates)
-            if self.cap_on:
-                self.cap.step_interval(self.vs.per_color_rate())
+            # probe + decide: one windowed Prime+Probe interval over every
+            # domain; the published ContentionView drives the subscribed
+            # CAS tiers and CAP ranking (decision stack never polls VScan)
+            view = self.session.refresh()
+            dom_rates = view.per_domain
             # act: policy placement (wakeup order randomized per interval)
             free = set(vcpus)
             for ti in self.rng.permutation(len(tasks)):

@@ -125,6 +125,17 @@ class SimHost:
                 return wl
         return None
 
+    def remove_cotenant(self, name: str) -> CotenantWorkload:
+        """Detach a registered traffic source entirely (vs merely disabling
+        it).  Measurement-only workloads (e.g. a contention burst) must be
+        removed once their phase ends so later phases — and any reuse of
+        this host — measure a clean baseline."""
+        wl = self.cotenant(name)
+        if wl is None:
+            raise KeyError(f"no cotenant named {name!r}")
+        self.cotenants.remove(wl)
+        return wl
+
     def retarget_cotenant(self, name: str, domain: Optional[int] = None,
                           rate_per_ms: Optional[float] = None,
                           enabled: Optional[bool] = None) -> CotenantWorkload:
@@ -214,11 +225,15 @@ class GuestVM:
 
     def __init__(self, host: SimHost, n_guest_pages: int = 1 << 13,
                  mapping: str = "contiguous", vcpu_cores: Sequence[int] = (0,),
-                 seed: int = 0):
+                 seed: int = 0,
+                 _page_table: Optional[np.ndarray] = None):
         self.host = host
         self.n_guest_pages = n_guest_pages
-        # hidden from the guest:
-        self._page_table = host.provision_pages(n_guest_pages, mapping)
+        # hidden from the guest (``_page_table`` is only passed by
+        # :meth:`reboot`, which reuses the existing backing instead of
+        # provisioning fresh host pages):
+        self._page_table = (_page_table if _page_table is not None
+                            else host.provision_pages(n_guest_pages, mapping))
         self.vcpu_cores = list(vcpu_cores)  # vcpu i -> host core (hidden!)
         self.n_vcpus = len(self.vcpu_cores)
         self.rng = np.random.default_rng(seed + 17)
@@ -250,6 +265,24 @@ class GuestVM:
 
     def free_pages(self, pages: Sequence[int]) -> None:
         self._free_guest_pages.extend(int(p) for p in pages)
+
+    def reserve_pages(self, pages: Sequence[int]) -> None:
+        """Mark specific guest pages as allocated (no-op for pages already
+        taken).  `CacheXSession.import_` re-pins the pages an imported
+        abstraction references so fresh allocations cannot recycle them."""
+        drop = {int(p) for p in pages}
+        self._free_guest_pages = [p for p in self._free_guest_pages
+                                  if p not in drop]
+
+    def reboot(self, seed: int = 0) -> "GuestVM":
+        """Guest reboot: the hypervisor keeps the VM's memory, so the
+        hidden GPA→HPA page table is *unchanged* — which is exactly why a
+        probed cache abstraction stays valid across reboots (page colors
+        and eviction sets are HPA properties).  All guest-side state is
+        fresh: page allocator, timer warmth, cost counters, rng."""
+        return GuestVM(self.host, n_guest_pages=self.n_guest_pages,
+                       vcpu_cores=list(self.vcpu_cores), seed=seed,
+                       _page_table=self._page_table)
 
     @staticmethod
     def gva(page: int, offset: int) -> int:

@@ -1,41 +1,84 @@
 """run_cachex — end-to-end CacheX pipeline against any registered platform.
 
-One call executes the full paper pipeline — VEV (eviction sets +
-associativity detection), VCOL (virtual colors), VSCAN (windowed
-Prime+Probe monitoring), CAS (contention tiers) and CAP (colored page-cache
-allocation) — against a :class:`repro.core.platforms.CachePlatform`, and
-reports per-scenario success metrics.  The point (paper §1) is that the
-*same guest-side code* succeeds across the whole provisioning matrix
-without being told which scenario it landed on; the report quantifies that
-per platform.
+One call attaches a :class:`~repro.core.abstraction.CacheXSession` to a
+freshly booted scenario and executes the full paper pipeline — VEV
+(eviction sets + associativity detection), VCOL (virtual colors), VSCAN
+(windowed Prime+Probe monitoring), CAS (contention tiers) and CAP (colored
+page-cache allocation) — then reports per-scenario success metrics.  The
+point (paper §1) is that the *same guest-side code* succeeds across the
+whole provisioning matrix without being told which scenario it landed on;
+the report quantifies that per platform.
 
-Success metrics mirror the paper's validation methodology (§6.2): the
-guest-side results are checked against host ground truth through the
-validation hypercalls only.
+`run_cachex` is a thin report-builder: all probing goes through the
+session's query API (`topology()` / `colors()` / `refresh()`), and the CAS
+/ CAP stages consume `subscribe()`d contention updates.  Success metrics
+mirror the paper's validation methodology (§6.2): the guest-side results
+are checked against host ground truth through the validation hypercalls
+only (`CacheXSession.validate`).
+
+Reports serialize as headered machine-readable CSV straight from
+``dataclasses.fields`` (:func:`dataclass_csv_header` /
+:func:`dataclass_csv_row`), so benchmark columns cannot drift from the
+dataclass.
 """
 
 from __future__ import annotations
 
+import csv
 import dataclasses
+import io
+import json
 import time
-from typing import Dict, List, Optional, Union
+import warnings
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.abstraction import (CacheXSession, ProbeConfig,
+                                    _build_colors, _build_vscan)
 from repro.core.cap import CapAllocator
 from repro.core.cas import TierTracker
-from repro.core.color import VCOL, color_accuracy
-from repro.core.eviction import VEV, build_many
-from repro.core.host_model import CotenantWorkload, polluter_gen
+from repro.core.host_model import CotenantWorkload, GuestVM, SimHost, \
+    polluter_gen
 from repro.core.platforms import CachePlatform, get_platform
-from repro.core.vscan import VScan
+
+
+# ---------------------------------------------------------------------------
+# dataclass -> CSV (headered, machine-readable; columns == fields)
+# ---------------------------------------------------------------------------
+
+def _csv_cell(value) -> str:
+    """One CSV cell: dicts/lists as canonical JSON, None empty."""
+    if value is None:
+        return ""
+    if isinstance(value, (dict, list, tuple)):
+        return json.dumps(value, sort_keys=True)
+    if isinstance(value, float):
+        return f"{value:.6g}"
+    return str(value)
+
+
+def dataclass_csv_header(cls) -> str:
+    """CSV header straight from ``dataclasses.fields`` — the column set
+    cannot drift from the report dataclass."""
+    return ",".join(f.name for f in dataclasses.fields(cls))
+
+
+def dataclass_csv_row(obj) -> str:
+    """One properly quoted CSV row, field order == header order."""
+    buf = io.StringIO()
+    csv.writer(buf, lineterminator="").writerow(
+        [_csv_cell(getattr(obj, f.name))
+         for f in dataclasses.fields(obj)])
+    return buf.getvalue()
 
 
 @dataclasses.dataclass
 class CacheXReport:
     """Per-scenario result of one :func:`run_cachex` execution.
 
-    Every column of the benchmark CSV comes from a field here, so units are
+    Every column of the benchmark CSV comes from a field here (via
+    :func:`dataclass_csv_header`/:func:`dataclass_csv_row`), so units are
     documented per field (docs/EXPERIMENTS.md maps fields to paper tables).
     """
 
@@ -73,150 +116,156 @@ class CacheXReport:
     #                               (GuestVM.stat_accesses)
     wall_s: float                 # host wall-clock seconds for the scenario
 
-    def row(self) -> str:
-        """One CSV-ish summary row (benchmark harness contract)."""
-        return (f"{self.platform},{self.provisioning},"
-                f"vev={100 * self.vev_success_rate:.0f}%,"
-                f"ways={self.detected_ways},"
-                f"vcol={100 * self.vcol_accuracy:.0f}%,"
-                f"vscan_idle={self.vscan_idle_rate:.2f},"
-                f"vscan_hot={self.vscan_contended_rate:.2f},"
-                f"dispatches={self.dispatches},wall={self.wall_s:.2f}s")
+    @classmethod
+    def csv_header(cls) -> str:
+        """Headered-CSV contract: columns are exactly the fields above."""
+        return dataclass_csv_header(cls)
+
+    def csv_row(self) -> str:
+        return dataclass_csv_row(self)
 
 
-def _verify_llc_set(vm, es) -> bool:
-    """Hypercall validation: all lines congruent in one (set, slice)."""
-    keys = {vm.hypercall_llc_setslice(int(g)) for g in es.gvas}
-    return len(keys) == 1
-
-
-# -- shared pipeline stages (run_cachex + the fleet simulator) ----------------
+# ---------------------------------------------------------------------------
+# deprecated stage shims (pre-CacheXSession API; see docs/MIGRATION.md)
+# ---------------------------------------------------------------------------
 
 def build_color_stage(vm, plat: CachePlatform, seed: int,
                       use_batch: bool = True):
-    """VCOL stage: build the platform's L2 color filters.  Returns
-    ``(vcol, cf)``; shared verbatim between :func:`run_cachex` and
-    `repro.core.fleet` so both drive the identical probing pipeline."""
-    vcol = VCOL(vm, vev=VEV(vm, votes=plat.votes, prime_reps=plat.prime_reps,
-                            use_batch=use_batch))
-    cf = vcol.build_color_filters(n_colors=plat.n_l2_colors,
-                                  ways=plat.l2.n_ways, seed=seed)
-    return vcol, cf
+    """Deprecated: use ``CacheXSession.attach(vm, plat, config).colors()``.
+
+    Kept as a one-release shim for pre-session callers; returns the raw
+    ``(vcol, cf)`` pair the session now owns."""
+    warnings.warn(
+        "build_color_stage is deprecated; attach a CacheXSession and use "
+        "session.colors() (docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    cfg = ProbeConfig.for_platform(plat, use_batch=use_batch, seed=seed)
+    return _build_colors(vm, plat, cfg)
 
 
 def build_vscan_stage(vm, plat: CachePlatform, vcol, cf, seed: int,
                       use_batch: bool = True, f: int = 2, offsets=(0,),
                       domain_vcpus: Optional[Dict[int, List[int]]] = None,
                       pool_pages=None, prune_conflicts: bool = False):
-    """VSCAN stage: allocate a probing pool and build the monitored-set
-    list, one constructor vCPU per LLC domain.  Returns
-    ``(vscan, build_info, domain_vcpus)``.
+    """Deprecated: use ``CacheXSession`` (``monitored_sets()`` /
+    ``refresh()``), which owns VSCAN construction and pool sizing via
+    :class:`~repro.core.abstraction.ProbeConfig`.
 
-    ``prune_conflicts`` runs :meth:`VScan.prune_self_conflicts` after
-    construction (drops monitored sets that VSCAN's own priming evicts on
-    few-row geometries; the fleet simulator needs honest per-domain rates,
-    while `run_cachex` keeps the raw set list for its coverage metrics)."""
-    if domain_vcpus is None:
-        domain_vcpus = {d: [d * plat.cores_per_domain]
-                        for d in range(plat.n_domains)}
-    ways = plat.effective_ways
-    if pool_pages is None:
-        pool_pages = vm.alloc_pages(
-            min(ways * plat.n_llc_rows_per_offset * plat.llc.n_slices * 3,
-                384))
-    vs, info = VScan.build(vm, cf, vcol, pool_pages, ways=ways, f=f,
-                           offsets=list(offsets), domain_vcpus=domain_vcpus,
-                           votes=plat.votes, prime_reps=plat.prime_reps,
-                           seed=seed, use_batch=use_batch)
-    if prune_conflicts:
-        info["pruned_self_conflicts"] = vs.prune_self_conflicts()
-    return vs, info, domain_vcpus
+    Kept as a one-release shim; returns ``(vscan, build_info,
+    domain_vcpus)`` like the pre-session helper."""
+    warnings.warn(
+        "build_vscan_stage is deprecated; attach a CacheXSession and use "
+        "session.monitored_sets()/refresh() (docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    cfg = ProbeConfig.for_platform(
+        plat, use_batch=use_batch, seed=seed, f=f, offsets=tuple(offsets),
+        prune_self_conflicts=prune_conflicts)
+    return _build_vscan(vm, plat, vcol, cf, cfg,
+                        domain_vcpus=domain_vcpus, pool_pages=pool_pages)
 
 
-def run_cachex(platform: Union[str, CachePlatform], seed: int = 0,
-               use_batch: bool = True,
-               monitor_intervals: int = 3) -> CacheXReport:
-    """Execute VEV -> VCOL -> VSCAN -> CAS/CAP against one scenario."""
+# ---------------------------------------------------------------------------
+# the one-shot driver
+# ---------------------------------------------------------------------------
+
+def run_cachex(platform: Union[str, CachePlatform],
+               seed: Optional[int] = None,
+               use_batch: Optional[bool] = None, monitor_intervals: int = 3,
+               config: Optional[ProbeConfig] = None,
+               host_vm: Optional[Tuple[SimHost, GuestVM]] = None
+               ) -> CacheXReport:
+    """Execute VEV -> VCOL -> VSCAN -> CAS/CAP against one scenario.
+
+    All probing routes through one :class:`CacheXSession`; this function
+    only sequences the experiment (quiesce / burst phases) and builds the
+    hypercall-validated report.  ``config`` overrides the platform-default
+    :class:`ProbeConfig`; explicitly passed ``seed``/``use_batch``
+    arguments take precedence over it (left unset they default to the
+    config's values, i.e. seed 0 / batched).  ``host_vm`` reuses an
+    already-booted pair instead of booting a fresh scenario: the host is
+    left clean (the measurement burst this driver attaches is removed
+    again, co-tenant enabled states are restored) and the report's cost
+    counters are deltas for this run only."""
     plat = get_platform(platform) if isinstance(platform, str) else platform
-    host, vm = plat.make_host_vm(seed=seed)
+    cfg = config if config is not None else ProbeConfig.for_platform(plat)
+    overrides = {}
+    if seed is not None:
+        overrides["seed"] = seed
+    if use_batch is not None:
+        overrides["use_batch"] = use_batch
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    host, vm = (host_vm if host_vm is not None
+                else plat.make_host_vm(seed=cfg.seed))
+    passes0, accesses0 = vm.stat_passes, vm.stat_accesses
+    cotenant_enabled = {wl.name: wl.enabled for wl in host.cotenants}
+    session = CacheXSession.attach(vm, plat, cfg)
     t0 = time.perf_counter()
 
     # ---- VCOL: color filters + virtual-color accuracy (§3.2) --------------
-    vcol, cf = build_color_stage(vm, plat, seed, use_batch=use_batch)
-    check_pages = vm.alloc_pages(16 * max(1, cf.n_colors))
-    colors = vcol.identify_colors_parallel(cf, check_pages)
-    vcol_acc = (color_accuracy(vm, check_pages, colors, plat.n_l2_colors)
-                if cf.n_colors else 0.0)
+    colors = session.colors()
+    check_pages = vm.alloc_pages(16 * max(1, colors.n_colors))
+    colors.colors_of(check_pages)
+    vcol_acc = (session.validate(pages=check_pages)["vcol_accuracy"]
+                if colors.n_colors else 0.0)
 
     # ---- VEV: minimal LLC eviction sets + associativity (§3.1) ------------
-    vev = VEV(vm, votes=plat.votes, prime_reps=plat.prime_reps,
-              use_batch=use_batch)
-    ways = plat.effective_ways
-    target_sets = min(4, plat.n_llc_rows_per_offset * plat.llc.n_slices)
-    pool = vev.make_pool(0, ways=ways,
-                         n_uncontrollable_rows=plat.n_llc_rows_per_offset,
-                         n_slices=plat.llc.n_slices)
-    results, _, _ = build_many(
-        vm, [{"offset": 0, "pool": pool, "max_sets": target_sets}],
-        "llc", ways, votes=plat.votes, seed=seed, use_batch=use_batch,
-        prime_reps=plat.prime_reps)
-    built = results[0]
-    verified = [es for es in built
-                if len(es) == ways and _verify_llc_set(vm, es)]
-
-    assoc_pool = vev.make_pool(64, ways=ways,
-                               n_uncontrollable_rows=plat.n_llc_rows_per_offset,
-                               n_slices=plat.llc.n_slices)
-    detected = vev.probe_associativity(assoc_pool, "llc", seed=seed)
+    topo = session.topology()
+    vev_check = session.validate(pages=[])
 
     # ---- VSCAN: windowed Prime+Probe monitoring (§3.3) --------------------
-    vs, _, domain_vcpus = build_vscan_stage(vm, plat, vcol, cf, seed,
-                                            use_batch=use_batch)
+    session.monitored_sets()         # build the monitor before quiescing
     for wl in host.cotenants:        # quiesce for the idle baseline
         wl.enabled = False
-    idle = np.mean([vs.monitor_once().rate.mean()
+    idle = np.mean([session.refresh().mean_rate
                     for _ in range(monitor_intervals)])
-    for wl in host.cotenants:        # platform noise back on, plus a burst
-        wl.enabled = True
-    burst = CotenantWorkload("runner_burst", 0, 150.0,
-                             polluter_gen(region_pages=2048))
-    host.add_cotenant(burst)
-    contended = np.mean([vs.monitor_once().rate.mean()
+    for wl in host.cotenants:        # platform noise back on (as the caller
+        #                              had it), plus a burst
+        wl.enabled = cotenant_enabled.get(wl.name, True)
+    host.add_cotenant(CotenantWorkload("runner_burst", 0, 150.0,
+                                       polluter_gen(region_pages=2048)))
+    contended = np.mean([session.refresh().mean_rate
                          for _ in range(monitor_intervals)])
 
     # ---- CAS: per-domain contention tiers (§4.1) --------------------------
-    tt = TierTracker(keys=list(domain_vcpus), thresholds=[0.5, 4.0])
+    tt = TierTracker(keys=list(topo.domain_vcpus), thresholds=[0.5, 4.0])
+    cas_sub = session.subscribe(tt.on_contention)
     for _ in range(3):
-        vs.monitor_once()
-        tt.update(vs.per_domain_rate())
-    burst.enabled = False
+        session.refresh()
+    session.unsubscribe(cas_sub)
+    # the burst was a measurement phase, not platform noise: remove it so
+    # the CAP stage (and any later reuse of this host) sees the platform's
+    # own baseline again
+    host.remove_cotenant("runner_burst")
 
     # ---- CAP: colored page-cache allocation (§4.2) ------------------------
-    free_pages = vm.alloc_pages(32 * max(1, cf.n_colors))
-    cap = CapAllocator(vcol.build_free_lists(cf, free_pages))
-    cap.update_contention(vs.per_color_rate() or
-                          {c: 0.0 for c in range(cf.n_colors)})
+    free_pages = vm.alloc_pages(32 * max(1, colors.n_colors))
+    cap = CapAllocator(colors.build_free_lists(free_pages))
+    cap.update_contention(session.contention(max_age_ms=float("inf"))
+                          .per_color or
+                          {c: 0.0 for c in range(colors.n_colors)})
     allocated = sum(cap.allocate() is not None
-                    for _ in range(16 * max(1, cf.n_colors)))
+                    for _ in range(16 * max(1, colors.n_colors)))
 
     return CacheXReport(
         platform=plat.name,
         provisioning=plat.provisioning,
-        vev_target_sets=target_sets,
-        vev_built_sets=len(built),
-        vev_verified_sets=len(verified),
-        vev_success_rate=len(verified) / max(1, target_sets),
-        detected_ways=detected,
-        n_colors=cf.n_colors,
+        vev_target_sets=topo.vev_target_sets,
+        vev_built_sets=topo.vev_built_sets,
+        vev_verified_sets=vev_check["vev_verified"],
+        vev_success_rate=vev_check["vev_verified"] / max(
+            1, topo.vev_target_sets),
+        detected_ways=topo.detected_associativity,
+        n_colors=colors.n_colors,
         vcol_accuracy=vcol_acc,
-        vscan_sets=len(vs.monitored),
+        vscan_sets=len(session.monitored_sets()),
         vscan_idle_rate=float(idle),
         vscan_contended_rate=float(contended),
         cas_tiers=dict(tt.tier),
         cap_allocated=int(allocated),
         cap_rollovers=cap.stats.color_rollovers,
-        dispatches=vm.stat_passes,
-        accesses=vm.stat_accesses,
+        dispatches=vm.stat_passes - passes0,
+        accesses=vm.stat_accesses - accesses0,
         wall_s=time.perf_counter() - t0,
     )
 

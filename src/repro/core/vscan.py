@@ -138,6 +138,35 @@ class VScan:
         return cls(vm, monitored, window_ms=window_ms,
                    ewma_alpha=ewma_alpha, use_batch=use_batch), info
 
+    # -- persistence (the `CacheXSession` export contract) ---------------------
+    def state_dict(self) -> Dict:
+        """JSON-serializable monitored-set list + window parameters.
+
+        EWMA rates and history are deliberately *not* serialized: they are
+        live measurements, stale by definition on a re-attached VM — the
+        importer re-measures with the restored monitored sets."""
+        return {
+            "window_ms": float(self.window_ms),
+            "default_window_ms": float(self.default_window_ms),
+            "ewma_alpha": float(self.ewma_alpha),
+            "monitored": [{"es": m.es.state_dict(), "color": int(m.color),
+                           "domain": int(m.domain), "vcpu": int(m.vcpu)}
+                          for m in self.monitored],
+        }
+
+    @classmethod
+    def from_state(cls, vm: GuestVM, state: Dict,
+                   use_batch: bool = True) -> "VScan":
+        monitored = [MonitoredSet(es=EvictionSet.from_state(m["es"]),
+                                  color=int(m["color"]),
+                                  domain=int(m["domain"]),
+                                  vcpu=int(m["vcpu"]))
+                     for m in state["monitored"]]
+        vs = cls(vm, monitored, window_ms=float(state["default_window_ms"]),
+                 ewma_alpha=float(state["ewma_alpha"]), use_batch=use_batch)
+        vs.window_ms = float(state["window_ms"])
+        return vs
+
     # -- associativity ---------------------------------------------------------
     def associativity(self) -> float:
         """Median minimal-eviction-set size across monitored sets (Table 3)."""

@@ -105,9 +105,17 @@ def test_cap_protects_working_set():
 
 
 def test_fleet_report_row_contract(fleet_pair):
-    row = fleet_pair["cas"].row()
-    assert row.startswith("skylake_sp,cas,cap=on,")
-    assert "quiet_res=" in row and "ws_lat=" in row
+    """Headered machine-readable CSV: columns come straight from the
+    dataclass fields, so they cannot silently drift."""
+    import csv
+    import dataclasses
+    import io
+    header = FleetReport.csv_header().split(",")
+    assert header == [f.name for f in dataclasses.fields(FleetReport)]
+    row = fleet_pair["cas"].csv_row()
+    cells = next(csv.reader(io.StringIO(row)))
+    assert len(cells) == len(header)
+    assert cells[:3] == ["skylake_sp", "cas", "on"]
 
 
 def test_fleet_view_widens_topology():

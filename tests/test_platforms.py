@@ -182,7 +182,8 @@ def test_run_cachex_dedicated_baseline():
     assert r.vscan_contended_rate > r.vscan_idle_rate
     assert r.cap_allocated > 0
     assert r.dispatches > 0 and r.accesses > 0
-    assert "skylake_sp" in r.row()
+    assert r.csv_row().startswith("skylake_sp,dedicated,")
+    assert r.csv_header().startswith("platform,provisioning,")
 
 
 def test_run_cachex_cat_scenario():
