@@ -11,6 +11,9 @@ Fig 11   — CAP latency improvement (vanilla / CAP / CAP+vscan)
 Fig 12   — CacheX monitoring overhead
 fleet    — Fig 10 / Tables 7-8 analogs, closed-loop: policy x platform x
            CAP sweep through the probe->decide->act->measure fleet loop
+plans    — ProbePlan executor vs the pre-plan batched baseline: physical
+           probe dispatches per fleet tick (legacy / plans / lockstep),
+           headline-parity check, bench-plans-dispatch.csv artifact
 """
 
 from __future__ import annotations
@@ -292,12 +295,15 @@ def bench_fleet():
 
     from repro.core.fleet import (fig10_summary, run_fleet_matrix,
                                   speedup_summary)
+    from repro.core.host_model import probe_dispatch_count
     platforms = [p for p in os.environ.get("FLEET_PLATFORMS", "").split(",")
                  if p] or None
     seeds = tuple(int(s) for s in
                   os.environ.get("FLEET_SEEDS", "0").split(",") if s) or (0,)
+    d0 = probe_dispatch_count()
     with timer() as t:
         reports = run_fleet_matrix(platforms=platforms, seeds=seeds)
+    matrix_dispatches = probe_dispatch_count() - d0
     for r in reports:
         emit(f"fleet.{r.platform}.{r.policy}_cap_{r.cap}",
              r.wall_s * 1e6,
@@ -319,7 +325,72 @@ def bench_fleet():
     path = write_report_csv("bench-fleet-report.csv", reports)
     emit("fleet.report_csv", 0.0, f"path={path};rows={len(reports)}")
     emit("fleet.matrix_wall", t["us"],
-         f"runs={len(reports)};seeds={len(seeds)}")
+         f"runs={len(reports)};seeds={len(seeds)};"
+         f"probe_dispatches={matrix_dispatches}")
+
+
+def bench_plans():
+    """ProbePlan acceptance bench: the closed-loop fleet (every combo a
+    co-running guest) run three ways on one platform —
+
+      * ``legacy``   the PR-1/PR-3 batched baseline (per-stage dispatch
+                     drivers, per-guest loops),
+      * ``plans``    ProbePlan programs, still one guest at a time,
+      * ``lockstep`` all guests' plans co-executed per tick
+                     (`probeplan.execute_many`, the `run_fleet_matrix`
+                     default),
+
+    comparing *physical* probe dispatches per tick (loop phase only;
+    construction is identical across modes) and asserting headline
+    parity.  Writes the dispatch-count CSV next to the fleet artifacts."""
+    import os
+    import time as _time
+
+    from repro.core.fleet import DEFAULT_COMBOS, FleetSim, _run_lockstep
+    from repro.core.host_model import probe_dispatch_count
+
+    plat = os.environ.get("PLANS_PLATFORM", "skylake_sp")
+    n_intervals, warmup = 12, 4
+    guests = len(DEFAULT_COMBOS)
+    rows = []
+    reports = {}
+    for mode in ("legacy", "plans", "lockstep"):
+        sims = [FleetSim(plat, policy=pol, cap=cap, seed=0,
+                         use_plans=(mode != "legacy"),
+                         n_intervals=n_intervals, warmup=warmup)
+                for pol, cap in DEFAULT_COMBOS]
+        d0 = probe_dispatch_count()
+        t0 = _time.perf_counter()
+        if mode == "lockstep":
+            reports[mode] = _run_lockstep(sims)
+        else:
+            reports[mode] = [s.run() for s in sims]
+        wall = _time.perf_counter() - t0
+        loop = probe_dispatch_count() - d0
+        per_tick = loop / n_intervals
+        rows.append((mode, guests, n_intervals, loop, per_tick, wall))
+        emit(f"plans.fleet_{mode}", wall * 1e6,
+             f"guests={guests};loop_dispatches={loop};"
+             f"per_tick={per_tick:.1f}")
+    # headline parity across modes (the bit-identity acceptance criterion)
+    parity = all(
+        a.throughput == b.throughput == c.throughput
+        and a.quiet_residency == b.quiet_residency == c.quiet_residency
+        and a.ws_lat_cycles == b.ws_lat_cycles == c.ws_lat_cycles
+        for a, b, c in zip(*[reports[m]
+                             for m in ("legacy", "plans", "lockstep")]))
+    legacy_pt, lock_pt = rows[0][4], rows[2][4]
+    emit("plans.dispatch_reduction", 0.0,
+         f"legacy_per_tick={legacy_pt:.1f};lockstep_per_tick={lock_pt:.1f};"
+         f"reduction={legacy_pt / max(lock_pt, 1e-9):.1f}x;"
+         f"headline_parity={parity}")
+    path = "bench-plans-dispatch.csv"
+    with open(path, "w") as f:
+        f.write("mode,guests,intervals,loop_dispatches,"
+                "dispatches_per_tick,wall_s\n")
+        for mode, g, n, loop, pt, wall in rows:
+            f.write(f"{mode},{g},{n},{loop},{pt:.2f},{wall:.3f}\n")
+    emit("plans.report_csv", 0.0, f"path={path};rows={len(rows)}")
 
 
 def run_all():
@@ -334,3 +405,4 @@ def run_all():
     bench_fig12_overhead()
     bench_scenario_matrix()
     bench_fleet()
+    bench_plans()

@@ -34,6 +34,7 @@ def main() -> None:
         ("fig12", bench_paper_tables.bench_fig12_overhead),
         ("matrix", bench_paper_tables.bench_scenario_matrix),
         ("fleet", bench_paper_tables.bench_fleet),
+        ("plans", bench_paper_tables.bench_plans),
         ("kernels", bench_system.bench_kernels),
         ("train", bench_system.bench_train_step),
         ("serve", bench_system.bench_serve_step),

@@ -17,11 +17,15 @@ docs/ARCHITECTURE.md):
   host_model   SimHost (hypervisor ground truth) / GuestVM (the only surface
                probing code may touch) + canned co-tenant traffic generators
   platforms    CachePlatform registry: the cloud-provisioning scenario matrix
+  probeplan    ProbePlan — the declarative probe IR (Commit/Wait/Measure/
+               Vote ops) + the one executor (`execute`, guest-vectorized
+               `execute_many`, `fuse`) every batched probe lowers through
   eviction     VEV — minimal eviction sets + associativity (§3.1)
   color        VCOL — virtual page colors + colored free lists (§3.2)
   vscan        VSCAN — windowed Prime+Probe contention monitoring (§3.3)
   abstraction  CacheXSession — the probed abstraction as a query API
-               (topology/colors/contention + subscribe + export/import)
+               (topology/colors/contention + plan/execute + subscribe +
+               export/import)
   cas          CAS — contention tiers + placement policies (§4.1)
   cap          CAP — color-aware page-cache allocation (§4.2)
   runner       run_cachex: one-shot report-builder over a session
@@ -40,11 +44,12 @@ from repro.core.eviction import VEV, EvictionSet
 from repro.core.fleet import (FleetReport, FleetSim, FleetWorkload,
                               fig10_summary, run_fleet, run_fleet_matrix,
                               speedup_summary)
-from repro.core.host_model import CotenantWorkload, GuestVM, SimHost
+from repro.core.host_model import (CotenantWorkload, GuestVM, SimHost,
+                                   probe_dispatch_count)
 from repro.core.platforms import (CachePlatform, all_platforms, get_platform,
                                   list_platforms, register_platform)
-from repro.core.runner import (CacheXReport, build_color_stage,
-                               build_vscan_stage, dataclass_csv_header,
+from repro.core.probeplan import PlanLowering, PlanResult, ProbePlan
+from repro.core.runner import (CacheXReport, dataclass_csv_header,
                                dataclass_csv_row, run_cachex, run_matrix)
 from repro.core.vscan import MonitoredSet, VScan, theoretical_coverage
 
@@ -64,7 +69,10 @@ __all__ = [
     "FleetWorkload",
     "GuestVM",
     "MonitoredSet",
+    "PlanLowering",
+    "PlanResult",
     "ProbeConfig",
+    "ProbePlan",
     "SimHost",
     "TierTracker",
     "TopologyView",
@@ -74,8 +82,6 @@ __all__ = [
     "VScan",
     "all_platforms",
     "allow_pull",
-    "build_color_stage",
-    "build_vscan_stage",
     "color_accuracy",
     "dataclass_csv_header",
     "dataclass_csv_row",
@@ -83,6 +89,7 @@ __all__ = [
     "get_platform",
     "list_platforms",
     "policy_place",
+    "probe_dispatch_count",
     "register_platform",
     "run_cachex",
     "run_fleet",

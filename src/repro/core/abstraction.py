@@ -55,7 +55,9 @@ from repro.core.color import VCOL, ColorFilters, color_accuracy
 from repro.core.eviction import C_POOL_SCALE, VEV, EvictionSet, build_many
 from repro.core.host_model import GuestVM
 from repro.core.platforms import CachePlatform, get_platform
-from repro.core.vscan import DEFAULT_WINDOW_MS, VScan
+from repro.core import probeplan
+from repro.core.probeplan import PlanLowering, PlanResult, ProbePlan
+from repro.core.vscan import DEFAULT_WINDOW_MS, VScan, VScanSnapshot
 
 EXPORT_FORMAT = "cachex-abstraction/v1"
 
@@ -86,6 +88,14 @@ class ProbeConfig:
     ``prime_reps``       prime repetitions per test (same rationale).
     ``use_batch``        route probes through the fused multi-set engine
                          (False keeps the seed per-test path for benches).
+    ``use_plans``        emit every batched probe as a ProbePlan program
+                         run by the one executor (`repro.core.probeplan`);
+                         False keeps the pre-plan per-stage dispatch
+                         drivers as the parity/benchmark reference.
+    ``lowering``         ProbePlan lowering hints (padding buckets, commit
+                         fusion, lockstep eligibility); platform-derived
+                         via :meth:`CachePlatform.plan_lowering` in
+                         :meth:`for_platform`.
     ``f``                monitored sets built per (domain, color, offset)
                          VSCAN partition (paper Table 5 coverage knob).
     ``offsets``          aligned page offsets VSCAN partitions by.
@@ -108,6 +118,8 @@ class ProbeConfig:
     votes: int = 1
     prime_reps: int = 1
     use_batch: bool = True
+    use_plans: bool = True
+    lowering: Optional[PlanLowering] = None
     f: int = 2
     offsets: Tuple[int, ...] = (0,)
     vev_target_sets: Optional[int] = None
@@ -124,7 +136,8 @@ class ProbeConfig:
                      **overrides) -> "ProbeConfig":
         """Platform defaults (votes/prime_reps/pool sizing), overridable."""
         plat = get_platform(plat) if isinstance(plat, str) else plat
-        kw = dict(votes=plat.votes, prime_reps=plat.prime_reps)
+        kw = dict(votes=plat.votes, prime_reps=plat.prime_reps,
+                  lowering=plat.plan_lowering())
         kw.update(overrides)
         cfg = cls(**kw)
         if cfg.vscan_pool_pages is None:
@@ -241,7 +254,8 @@ def _build_colors(vm: GuestVM, plat: CachePlatform,
                   cfg: ProbeConfig) -> Tuple[VCOL, ColorFilters]:
     """VCOL stage: build the platform's L2 color filters."""
     vcol = VCOL(vm, vev=VEV(vm, votes=cfg.votes, prime_reps=cfg.prime_reps,
-                            use_batch=cfg.use_batch))
+                            use_batch=cfg.use_batch,
+                            use_plans=cfg.use_plans, lowering=cfg.lowering))
     cf = vcol.build_color_filters(n_colors=plat.n_l2_colors,
                                   ways=plat.l2.n_ways, seed=cfg.seed)
     return vcol, cf
@@ -273,7 +287,8 @@ def _build_vscan(vm: GuestVM, plat: CachePlatform, vcol: VCOL,
                            prime_reps=cfg.prime_reps, seed=cfg.seed,
                            window_ms=cfg.window_ms,
                            ewma_alpha=cfg.ewma_alpha,
-                           use_batch=cfg.use_batch)
+                           use_batch=cfg.use_batch,
+                           use_plans=cfg.use_plans, lowering=cfg.lowering)
     if cfg.prune_self_conflicts:
         info["pruned_self_conflicts"] = vs.prune_self_conflicts()
     return vs, info, domain_vcpus
@@ -345,7 +360,8 @@ class CacheXSession:
             return
         plat, cfg, vm = self.platform, self.config, self.vm
         vev = VEV(vm, votes=cfg.votes, prime_reps=cfg.prime_reps,
-                  use_batch=cfg.use_batch)
+                  use_batch=cfg.use_batch, use_plans=cfg.use_plans,
+                  lowering=cfg.lowering)
         ways = plat.effective_ways
         target = cfg.resolve_vev_targets(plat)
         pool = vev.make_pool(0, ways=ways,
@@ -354,7 +370,8 @@ class CacheXSession:
         results, _, _ = build_many(
             vm, [{"offset": 0, "pool": pool, "max_sets": target}],
             "llc", ways, votes=cfg.votes, seed=cfg.seed,
-            use_batch=cfg.use_batch, prime_reps=cfg.prime_reps)
+            use_batch=cfg.use_batch, prime_reps=cfg.prime_reps,
+            use_plans=cfg.use_plans, lowering=cfg.lowering)
         self._llc_sets = results[0]
         assoc_pool = vev.make_pool(
             64, ways=ways, n_uncontrollable_rows=plat.n_llc_rows_per_offset,
@@ -425,9 +442,48 @@ class CacheXSession:
         return self._last
 
     def refresh(self) -> ContentionView:
-        """Run one monitoring interval now and publish it to subscribers."""
+        """Run one monitoring interval now and publish it to subscribers.
+
+        On the default config this is exactly ``execute(plan())``: the
+        interval compiles to a ProbePlan and runs through the one
+        executor; pre-plan configs keep the direct `monitor_once` route."""
         self._ensure_vscan()
-        snap = self._vs.monitor_once()
+        if self.config.use_plans and self.config.use_batch:
+            plan = self.plan()
+            return self.apply(plan, probeplan.execute(self.vm, plan))
+        return self._publish(self._vs.monitor_once())
+
+    # -- the plan surface ----------------------------------------------------
+    def plan(self) -> ProbePlan:
+        """Compile the next monitoring interval to a ProbePlan (fused
+        prime Commit → Wait(window) → WarmTimer → timed probe Measure)
+        without running it — callers can inspect it, re-run it, fuse it,
+        or co-execute many sessions' plans in one vectorized program
+        (`probeplan.execute_many`; `FleetSim` batches all guests' per-tick
+        monitoring this way).  Builds the VSCAN stage on first call."""
+        self._ensure_vscan()
+        return self._vs.monitor_plan()
+
+    def execute(self, plan: ProbePlan) -> Union[ContentionView, PlanResult]:
+        """Execute a ProbePlan against this session's VM.  Monitoring
+        plans (from :meth:`plan`) are applied and published, returning the
+        resulting :class:`ContentionView`; any other plan returns the raw
+        :class:`~repro.core.probeplan.PlanResult`."""
+        result = probeplan.execute(self.vm, plan)
+        if plan.label == "vscan.monitor":
+            return self.apply(plan, result)
+        return result
+
+    def apply(self, plan: ProbePlan, result: PlanResult) -> ContentionView:
+        """Consume an externally executed monitoring plan (e.g. this
+        session's slot of a multi-guest `execute_many`) and publish the
+        view to subscribers — the result-application half of
+        :meth:`execute`."""
+        if plan.label != "vscan.monitor":
+            raise ValueError(f"not a monitoring plan: {plan.label!r}")
+        return self._publish(self._vs.apply_monitor(plan, result))
+
+    def _publish(self, snap: VScanSnapshot) -> ContentionView:
         self._intervals += 1
         view = ContentionView(
             per_domain=self._vs.per_domain_rate(),
@@ -507,6 +563,8 @@ class CacheXSession:
         if config is None:
             kw = dict(data["config"])
             kw["offsets"] = tuple(kw["offsets"])
+            if isinstance(kw.get("lowering"), dict):
+                kw["lowering"] = PlanLowering(**kw["lowering"])
             config = ProbeConfig(**kw)
         session = cls(vm, plat, config)
         reserve: set = set()
@@ -515,7 +573,8 @@ class CacheXSession:
             session._cf = ColorFilters.from_state(sec["filters"])
             session._vcol = VCOL(vm, vev=VEV(
                 vm, votes=config.votes, prime_reps=config.prime_reps,
-                use_batch=config.use_batch))
+                use_batch=config.use_batch, use_plans=config.use_plans,
+                lowering=config.lowering))
             session._page_colors = {int(p): int(c)
                                     for p, c in sec["page_colors"].items()}
             session._free_lists = {int(c): [int(p) for p in v]
@@ -541,7 +600,9 @@ class CacheXSession:
                 reserve.update(int(g) >> PAGE_BITS for g in es.gvas)
         if "vscan" in data:
             session._vs = VScan.from_state(vm, data["vscan"],
-                                           use_batch=config.use_batch)
+                                           use_batch=config.use_batch,
+                                           use_plans=config.use_plans,
+                                           lowering=config.lowering)
             for m in session._vs.monitored:
                 reserve.update(int(g) >> PAGE_BITS for g in m.es.gvas)
         vm.reserve_pages(sorted(reserve))

@@ -203,18 +203,70 @@ def _access_one(state, geom: MachineGeometry, core, block, cotenant):
             "clock": clock, "rng": rng}, lat.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("geom",), donate_argnums=(0,))
-def access_stream(state, geom: MachineGeometry, blocks, cores, cotenant):
-    """Run a 1-D stream of accesses. Returns (state, latencies)."""
+def _stream_scan(state, geom: MachineGeometry, blocks, cores, cotenant):
     def step(st, x):
         blk, core, ct = x
         return _access_one(st, geom, core, blk, ct)
     return jax.lax.scan(step, state, (blocks, cores, cotenant))
 
 
+@functools.partial(jax.jit, static_argnames=("geom",), donate_argnums=(0,))
+def access_stream(state, geom: MachineGeometry, blocks, cores, cotenant):
+    """Run a 1-D stream of accesses. Returns (state, latencies)."""
+    return _stream_scan(state, geom, blocks, cores, cotenant)
+
+
+@functools.partial(jax.jit, static_argnames=("geom",), donate_argnums=(0,))
+def access_streams_committed(states, geom: MachineGeometry, blocks, cores,
+                             cotenant):
+    """G independent machines each run (and COMMIT) their own access stream
+    in one jitted dispatch: `access_stream` vmapped over stacked machine
+    states.  ``states`` is a machine-state pytree with a leading guest axis
+    (see :func:`stack_states`); ``blocks``/``cores``/``cotenant`` are
+    (G, T).  Returns (states, latencies (G, T)).
+
+    This is the multi-guest lowering target of committed ProbePlan ops
+    (prime / traverse): each guest's lane is bit-identical to running its
+    stream alone through :func:`access_stream` from its own state (integer
+    arithmetic throughout — vmap changes nothing).
+    """
+    return jax.vmap(
+        lambda s, b, c, t: _stream_scan(s, geom, b, c, t))(
+            states, blocks, cores, cotenant)
+
+
+def stack_states(states):
+    """Stack per-guest machine states into one pytree with a leading guest
+    axis (host-side helper for the multi-guest dispatch paths)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(states, n: int):
+    """Split a stacked machine-state pytree back into per-guest states."""
+    return [jax.tree_util.tree_map(lambda x: x[i], states) for i in range(n)]
+
+
 # Per-lane rng fork for the batched engine.  Lane 0 keeps the machine rng
 # verbatim so a single-lane batched call is bit-identical to access_stream.
 RNG_LANE_STRIDE = 0x9E3779B1
+
+
+def _measure_lanes(state, geom: MachineGeometry, blocks, cores, cotenant,
+                   salt):
+    def lane(rng, blk_row, core, ct):
+        st = dict(state)
+        st["rng"] = rng
+
+        def step(s, b):
+            return _access_one(s, geom, core, b, ct)
+
+        _, lats = jax.lax.scan(step, st, blk_row)
+        return lats
+
+    n_lanes = blocks.shape[0]
+    rngs = (state["rng"] + jnp.uint32(salt) * jnp.uint32(0x7F4A7C15) +
+            jnp.arange(n_lanes, dtype=jnp.uint32) * jnp.uint32(RNG_LANE_STRIDE))
+    return jax.vmap(lane)(rngs, blocks, cores, cotenant)
 
 
 @functools.partial(jax.jit, static_argnames=("geom",))
@@ -239,20 +291,24 @@ def access_streams_batched(state, geom: MachineGeometry, blocks, cores,
     probes of one snapshot draw independent replacement decisions rather
     than replaying the identical trial.
     """
-    def lane(rng, blk_row, core, ct):
-        st = dict(state)
-        st["rng"] = rng
+    return _measure_lanes(state, geom, blocks, cores, cotenant, salt)
 
-        def step(s, b):
-            return _access_one(s, geom, core, b, ct)
 
-        _, lats = jax.lax.scan(step, st, blk_row)
-        return lats
-
-    n_lanes = blocks.shape[0]
-    rngs = (state["rng"] + jnp.uint32(salt) * jnp.uint32(0x7F4A7C15) +
-            jnp.arange(n_lanes, dtype=jnp.uint32) * jnp.uint32(RNG_LANE_STRIDE))
-    return jax.vmap(lane)(rngs, blocks, cores, cotenant)
+@functools.partial(jax.jit, static_argnames=("geom",))
+def access_streams_batched_multi(states, geom: MachineGeometry, blocks,
+                                 cores, cotenant, salts):
+    """The batched engine vmapped over guests: G machines × B measurement
+    lanes × T accesses in ONE jitted dispatch.  ``states`` has a leading
+    guest axis (:func:`stack_states`); ``blocks``: (G, B, T); ``cores``/
+    ``cotenant``: (G, B); ``salts``: (G,) uint32 (each guest's own salt —
+    per-lane rng forks depend only on the guest's machine rng, its salt and
+    the lane index, so every guest's latencies are bit-identical to a
+    standalone :func:`access_streams_batched` call on its own state).
+    Returns latencies (G, B, T).
+    """
+    return jax.vmap(
+        lambda s, b, c, t, sa: _measure_lanes(s, geom, b, c, t, sa))(
+            states, blocks, cores, cotenant, salts)
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,8 @@ import numpy as np
 from repro.core.cachesim import L2_MISS_THRESHOLD, PAGE_BITS
 from repro.core.eviction import VEV, EvictionSet
 from repro.core.host_model import GuestVM
+from repro.core import probeplan
+from repro.core.probeplan import Measure, ProbePlan
 
 
 def replicate_filter(es: EvictionSet, offset: int) -> np.ndarray:
@@ -114,8 +116,9 @@ class VCOL:
 
         With the batched probe engine (``vev.use_batch``, the default) every
         page becomes one lane of a single fused multi-set Prime+Probe
-        dispatch; the legacy path issues one fused stream per ``batch``
-        pages (the seed Table 4 path).
+        dispatch — emitted as a one-op Measure ProbePlan (or the pre-plan
+        direct batched call when ``vev.use_plans`` is off); the legacy path
+        issues one fused stream per ``batch`` pages (the seed Table 4 path).
         """
         pages = np.asarray(pages, np.int64)
         n_colors = cf.n_colors
@@ -134,7 +137,14 @@ class VCOL:
                      for off in cf.offsets], np.int64)   # (len(chunk)*colors)
                 lanes.append(np.concatenate([flat, filter_lines, flat]))
                 spans.append((s, len(chunk), len(flat)))
-            lat_lanes = self.vm.timed_access_batch(lanes, vcpu=self.vcpu)
+            if self.vev.use_plans:
+                plan = ProbePlan(
+                    ops=(Measure(lanes=tuple(lanes),
+                                 vcpus=(self.vcpu,) * len(lanes)),),
+                    label="vcol.identify", hints=self.vev.lowering)
+                lat_lanes = probeplan.execute(self.vm, plan).last
+            else:
+                lat_lanes = self.vm.timed_access_batch(lanes, vcpu=self.vcpu)
             for (s, n, flen), lats in zip(spans, lat_lanes):
                 probe = lats[flen + len(filter_lines):].reshape(n, n_colors)
                 evicted = probe > L2_MISS_THRESHOLD

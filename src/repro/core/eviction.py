@@ -33,6 +33,8 @@ import numpy as np
 from repro.core.cachesim import (BLOCKS_PER_PAGE, L2_MISS_THRESHOLD,
                                  LLC_MISS_THRESHOLD, LINE_BITS, PAGE_BITS)
 from repro.core.host_model import GuestVM
+from repro.core import probeplan
+from repro.core.probeplan import PlanLowering, ProbePlan, Vote
 
 C_POOL_SCALE = 3  # paper §3.1: scaling factor C
 
@@ -45,11 +47,27 @@ def _probe_lanes(tests, prime_reps: int) -> List[np.ndarray]:
         for t, c in tests]
 
 
+def vote_plan(tests: Sequence[Tuple[int, Sequence[int]]], prime_reps: int,
+              vcpu: int, threshold: int, votes: int,
+              lowering: Optional[PlanLowering] = None,
+              label: str = "vev.vote") -> ProbePlan:
+    """Compile a round of (target, candidates) eviction tests to a one-op
+    ProbePlan: a majority-voted :class:`~repro.core.probeplan.Vote` over
+    the Prime+Probe lanes ``[target, candidates*prime_reps, target]``."""
+    lanes = tuple(_probe_lanes(tests, prime_reps))
+    return ProbePlan(
+        ops=(Vote(lanes=lanes, vcpus=(vcpu,) * len(lanes),
+                  threshold=threshold, votes=votes),),
+        label=label, hints=lowering)
+
+
 def _majority_verdicts(vm: GuestVM, lanes: List[np.ndarray], vcpu, thr: int,
                        votes: int) -> np.ndarray:
     """Fused majority-voted eviction verdicts: one batched dispatch per
     vote, the vote index salting the per-lane rng fork so each vote is an
-    independent trial under non-deterministic replacement."""
+    independent trial under non-deterministic replacement.  (The
+    pre-ProbePlan batched path, kept as the parity reference the executor's
+    ``Vote`` lowering is tested against.)"""
     hits = np.zeros(len(lanes), np.int64)
     for vote in range(votes):
         lats = vm.timed_access_batch(lanes, vcpu=vcpu, salt=vote)
@@ -93,7 +111,9 @@ class VEV:
     """Eviction-set constructor bound to one GuestVM."""
 
     def __init__(self, vm: GuestVM, votes: int = 1, max_backtracks: int = 8,
-                 vcpu: int = 0, prime_reps: int = 1, use_batch: bool = True):
+                 vcpu: int = 0, prime_reps: int = 1, use_batch: bool = True,
+                 use_plans: bool = True,
+                 lowering: Optional[PlanLowering] = None):
         self.vm = vm
         self.votes = votes
         self.max_backtracks = max_backtracks
@@ -108,6 +128,11 @@ class VEV:
         # of tests); False keeps the per-test sequential path for
         # benchmarking the dispatch reduction.
         self.use_batch = use_batch
+        # use_plans emits the batched tests as ProbePlan Vote programs
+        # (`probeplan.execute`); False keeps the pre-plan direct
+        # `_majority_verdicts` path as the parity reference.
+        self.use_plans = use_plans
+        self.lowering = lowering
         self.stats = VEVStats()
 
     # -- thresholds -----------------------------------------------------------
@@ -150,6 +175,11 @@ class VEV:
         if not self.use_batch:
             return np.array([self.evicts(t, c, level) for t, c in tests])
         self.stats.tests += len(tests) * self.votes
+        if self.use_plans:
+            plan = vote_plan(tests, self.prime_reps, self.vcpu,
+                             self._threshold(level), self.votes,
+                             lowering=self.lowering)
+            return probeplan.execute(self.vm, plan).last
         return _majority_verdicts(self.vm,
                                   _probe_lanes(tests, self.prime_reps),
                                   self.vcpu, self._threshold(level),
@@ -378,15 +408,20 @@ def _drive(gen, test_fn):
 
 def build_many(vm: GuestVM, jobs: List[Dict], level: str, ways: int,
                votes: int = 1, seed: int = 0, use_batch: bool = True,
-               prime_reps: int = 1) -> Tuple[List[List[EvictionSet]],
-                                             List[int], List[int]]:
+               prime_reps: int = 1, use_plans: bool = True,
+               lowering: Optional[PlanLowering] = None
+               ) -> Tuple[List[List[EvictionSet]], List[int], List[int]]:
     """Merged multi-partition eviction-set construction (Fig 6).
 
     ``jobs``: dicts with keys ``offset``, ``pool``, optional ``max_sets`` and
     ``vcpu``.  All partitions advance in lockstep, one fused multi-set
     Prime+Probe dispatch per round across every partition still running —
     the batched realization of the paper's parallel construction (partitions
-    are disjoint rows, so their lanes never interfere).
+    are disjoint rows, so their lanes never interfere).  With ``use_plans``
+    each partition's round compiles to a one-op Vote ProbePlan and the
+    round's plans are :func:`~repro.core.probeplan.fuse`\\ d into a single
+    program sharing its dispatches; ``use_plans=False`` keeps the pre-plan
+    direct `_majority_verdicts` merge (same lanes, same dispatches).
 
     Returns (per-job built sets, per-job round counts, per-job prune-failure
     counts).  A job's round count is the number of dispatches it would have
@@ -394,7 +429,8 @@ def build_many(vm: GuestVM, jobs: List[Dict], level: str, ways: int,
     the parallel critical path.
     """
     vevs = [VEV(vm, votes=votes, vcpu=int(j.get("vcpu", 0)),
-                prime_reps=prime_reps, use_batch=use_batch) for j in jobs]
+                prime_reps=prime_reps, use_batch=use_batch,
+                use_plans=use_plans, lowering=lowering) for j in jobs]
     results: List[Optional[List[EvictionSet]]] = [None] * len(jobs)
     rounds: List[int] = [0] * len(jobs)
     if not use_batch:
@@ -418,21 +454,33 @@ def build_many(vm: GuestVM, jobs: List[Dict], level: str, ways: int,
         except StopIteration as e:
             results[i] = e.value
     while pending:
-        lanes: List[np.ndarray] = []
-        vcpus: List[int] = []
-        spans: Dict[int, Tuple[int, int]] = {}
-        for i, tests in pending.items():
+        order = list(pending)
+        for i in order:
             rounds[i] += votes   # dispatches this job would issue alone
-            start = len(lanes)
-            lanes.extend(_probe_lanes(tests, prime_reps))
-            vcpus.extend([vevs[i].vcpu] * len(tests))
-            spans[i] = (start, len(lanes))
-        verdicts = _majority_verdicts(vm, lanes, vcpus, thr, votes)
+        if use_plans:
+            plans = [vote_plan(pending[i], prime_reps, vevs[i].vcpu, thr,
+                               votes, lowering=lowering, label="vev.build")
+                     for i in order]
+            fused, spans = probeplan.fuse(plans)
+            split = probeplan.split_result(probeplan.execute(vm, fused),
+                                           spans)
+            per_job = {i: r.last for i, r in zip(order, split)}
+        else:
+            lanes: List[np.ndarray] = []
+            vcpus: List[int] = []
+            bounds: Dict[int, Tuple[int, int]] = {}
+            for i in order:
+                start = len(lanes)
+                lanes.extend(_probe_lanes(pending[i], prime_reps))
+                vcpus.extend([vevs[i].vcpu] * len(pending[i]))
+                bounds[i] = (start, len(lanes))
+            verdicts = _majority_verdicts(vm, lanes, vcpus, thr, votes)
+            per_job = {i: verdicts[a:b] for i, (a, b) in bounds.items()}
         nxt = {}
-        for i, (a, b) in spans.items():
-            vevs[i].stats.tests += (b - a) * votes
+        for i in order:
+            vevs[i].stats.tests += len(pending[i]) * votes
             try:
-                nxt[i] = gens[i].send(verdicts[a:b])
+                nxt[i] = gens[i].send(per_job[i])
             except StopIteration as e:
                 results[i] = e.value
         pending = nxt
@@ -455,7 +503,10 @@ class ParallelBuildResult:
 def build_parallel(vm: GuestVM, partitions: List[Dict], level: str,
                    ways: int, pair_vcpus: List[Tuple[int, int]],
                    vcpu_domain: Dict[int, int], votes: int = 1,
-                   seed: int = 0, use_batch: bool = True) -> ParallelBuildResult:
+                   seed: int = 0, use_batch: bool = True,
+                   use_plans: bool = True,
+                   lowering: Optional[PlanLowering] = None
+                   ) -> ParallelBuildResult:
     """Row-partitioned parallel construction (Fig 6).
 
     `partitions`: list of dicts with keys {"offset": int, "pool": np.ndarray,
@@ -476,7 +527,8 @@ def build_parallel(vm: GuestVM, partitions: List[Dict], level: str,
             # constructor primes in one domain, helper-assisted probes land in
             # another: every test times out; model as wasted passes + failure.
             before = vm.stat_passes
-            vev = VEV(vm, votes=votes, vcpu=ctor, use_batch=use_batch)
+            vev = VEV(vm, votes=votes, vcpu=ctor, use_batch=use_batch,
+                      use_plans=use_plans, lowering=lowering)
             vev.evicts(int(part["pool"][0]), part["pool"][:ways * 2], level)
             failures += 1
             per_part_passes[i] = vm.stat_passes - before
@@ -489,7 +541,9 @@ def build_parallel(vm: GuestVM, partitions: List[Dict], level: str,
         # (build_many); per-job round counts model each partition's
         # standalone cost for the Table 2 sequential-vs-critical-path report
         results, rounds, fails = build_many(vm, jobs, level, ways, votes=votes,
-                                            seed=seed, use_batch=use_batch)
+                                            seed=seed, use_batch=use_batch,
+                                            use_plans=use_plans,
+                                            lowering=lowering)
         for j, (built, r) in enumerate(zip(results, rounds)):
             i = job_part_idx[j]
             per_part_passes[i] = r

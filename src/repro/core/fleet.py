@@ -67,6 +67,9 @@ from repro.core.cas import TierTracker, policy_place
 from repro.core.host_model import (CotenantWorkload, congruent_gen,
                                    polluter_gen)
 from repro.core.platforms import CachePlatform, get_platform
+from repro.core import probeplan
+from repro.core.probeplan import (Commit, Measure, ProbePlan, Segment,
+                                  WarmTimer)
 from repro.core.runner import dataclass_csv_header, dataclass_csv_row
 
 FLEET_POLICIES = ("eevdf", "rusty", "cas")
@@ -209,6 +212,7 @@ class FleetSim:
                  policy: str = "cas", cap: str = "on",
                  workloads: Optional[List[FleetWorkload]] = None,
                  seed: int = 0, use_batch: bool = True,
+                 use_plans: bool = True,
                  n_intervals: int = 12, warmup: int = 4,
                  ticks_per_interval: int = 32, stream_len: int = 192,
                  ws_pages: int = 8, thresholds: Sequence[float] = (1.0, 4.0)):
@@ -221,6 +225,15 @@ class FleetSim:
         self.cap_on = (cap == "on")
         self.seed = seed
         self.use_batch = use_batch
+        # use_plans drives every per-interval probe through ProbePlan
+        # programs (`steps()` yields them; `run_fleet_matrix` co-executes
+        # all guests' plans in lockstep); False keeps the pre-plan
+        # per-dispatch loop as the parity/benchmark reference.  Plans are
+        # inherently batched, so the seed use_batch=False reference keeps
+        # the per-dispatch loop too (same gate as session.refresh /
+        # VScan.monitor_once).
+        self.use_plans = use_plans
+        self._plan_route = use_plans and use_batch
         self.n_intervals = n_intervals
         self.warmup = warmup
         self.ticks = ticks_per_interval
@@ -236,7 +249,9 @@ class FleetSim:
         self.session = CacheXSession.attach(
             self.vm, self.plat,
             ProbeConfig.for_platform(self.plat, use_batch=use_batch,
-                                     seed=seed, prune_self_conflicts=True))
+                                     use_plans=use_plans, seed=seed,
+                                     prune_self_conflicts=True))
+        self.lowering = self.session.config.lowering
         self.colors = self.session.colors()          # VCOL color filters
         self.session.monitored_sets()                # VSCAN monitor build
         self.domain_vcpus = self.session.domain_vcpus()
@@ -355,6 +370,30 @@ class FleetSim:
         return out
 
     def run(self) -> FleetReport:
+        """Run the closed loop standalone: drive :meth:`steps`, executing
+        each yielded ProbePlan against this sim's own guest.  A matrix
+        harness co-executes many sims' plans instead
+        (:func:`run_fleet_matrix` lockstep mode)."""
+        gen = self.steps()
+        try:
+            plan = gen.send(None)
+            while True:
+                plan = gen.send(probeplan.execute(self.vm, plan))
+        except StopIteration as e:
+            return e.value
+
+    def steps(self):
+        """Generator form of the closed loop: yields one ProbePlan per
+        probe point — the windowed VSCAN monitoring interval
+        (``session.plan()``), the committed working-set + page-cache-stream
+        traversal, the timed working-set measurement — and receives each
+        plan's PlanResult.  Every sim on one platform yields structurally
+        congruent plans in the same order, which is what lets the matrix
+        driver batch all guests' per-tick probing into single vectorized
+        executions.  With ``use_plans=False`` (or the seed
+        ``use_batch=False`` reference) nothing is yielded: the loop runs
+        the pre-plan per-dispatch calls inline (parity reference).
+        Returns the :class:`FleetReport`."""
         t0 = time.perf_counter()
         plat, vm, tasks = self.plat, self.vm, self.tasks
         vcpus = sorted(self.vcpu_domain)
@@ -381,7 +420,11 @@ class FleetSim:
             # probe + decide: one windowed Prime+Probe interval over every
             # domain; the published ContentionView drives the subscribed
             # CAS tiers and CAP ranking (decision stack never polls VScan)
-            view = self.session.refresh()
+            if self._plan_route:
+                mplan = self.session.plan()
+                view = self.session.apply(mplan, (yield mplan))
+            else:
+                view = self.session.refresh()
             dom_rates = view.per_domain
             # act: policy placement (wakeup order randomized per interval)
             free = set(vcpus)
@@ -392,16 +435,30 @@ class FleetSim:
                 task.vcpu = v
                 free.discard(v)
             # act: this interval's page-cache stream through the real caches
-            vm.access(self.ws_lines, vcpu=self._sens.vcpu)
             stream = self._stream_pages()
             stream_lines = np.array([vm.gva(p, off)
                                      for p in stream for off in (0, 64)])
-            vm.access(stream_lines, vcpu=self._streamer.vcpu)
             # measure: the working set's latency after the stream (batched
             # timed lanes; uncommitted measurement probe)
-            vm.warm_timer()
-            lat = float(np.mean(vm.timed_access_batch(
-                [self.ws_lines], vcpu=[self._sens.vcpu])[0]))
+            if self._plan_route:
+                yield ProbePlan(
+                    ops=(Commit(segments=(
+                        Segment(gvas=self.ws_lines, vcpu=self._sens.vcpu),
+                        Segment(gvas=stream_lines,
+                                vcpu=self._streamer.vcpu))),),
+                    label="fleet.traverse", hints=self.lowering)
+                lres = yield ProbePlan(
+                    ops=(WarmTimer(),
+                         Measure(lanes=(self.ws_lines,),
+                                 vcpus=(self._sens.vcpu,))),
+                    label="fleet.ws_lat", hints=self.lowering)
+                lat = float(np.mean(lres.last[0]))
+            else:
+                vm.access(self.ws_lines, vcpu=self._sens.vcpu)
+                vm.access(stream_lines, vcpu=self._streamer.vcpu)
+                vm.warm_timer()
+                lat = float(np.mean(vm.timed_access_batch(
+                    [self.ws_lines], vcpu=[self._sens.vcpu])[0]))
             if self.cap_on:
                 self.cap.reclaim_all()   # interval end: page cache dropped
                 #                          under memory pressure (mechanism
@@ -456,18 +513,66 @@ def run_fleet(platform: Union[str, CachePlatform], policy: str = "cas",
     return FleetSim(platform, policy=policy, cap=cap, **kw).run()
 
 
+def _run_lockstep(sims: List[FleetSim]) -> List[FleetReport]:
+    """Advance co-running sims' :meth:`FleetSim.steps` generators in
+    lockstep: at each step the sims' yielded (structurally congruent)
+    ProbePlans execute as ONE vectorized program over all guests
+    (`probeplan.execute_many`) — one dispatch per probe point per tick for
+    the whole fleet, instead of one per guest.  Per-guest results, and
+    therefore every report metric, are bit-identical to running each sim
+    alone (each guest keeps its own host state, rng and TSC noise)."""
+    gens = {i: sim.steps() for i, sim in enumerate(sims)}
+    reports: List[Optional[FleetReport]] = [None] * len(sims)
+    pending: Dict[int, ProbePlan] = {}
+    for i, gen in gens.items():
+        try:
+            pending[i] = gen.send(None)
+        except StopIteration as e:
+            reports[i] = e.value
+    while pending:
+        order = sorted(pending)
+        results = probeplan.execute_many([sims[i].vm for i in order],
+                                         [pending[i] for i in order])
+        nxt: Dict[int, ProbePlan] = {}
+        for i, res in zip(order, results):
+            try:
+                nxt[i] = gens[i].send(res)
+            except StopIteration as e:
+                reports[i] = e.value
+        pending = nxt
+    return reports
+
+
 def run_fleet_matrix(platforms: Optional[List[str]] = None,
                      combos: Sequence[Tuple[str, str]] = DEFAULT_COMBOS,
                      seeds: Sequence[int] = (0,),
+                     lockstep: bool = True,
                      **kw) -> List[FleetReport]:
     """The policy x platform x seed sweep behind Fig 10 / Tables 7-8: every
     (platform, policy, cap, seed) combination through the full closed loop.
     jit caching makes repeat combos on one platform cheap; results feed
-    :func:`fig10_summary` and :func:`speedup_summary`."""
+    :func:`fig10_summary` and :func:`speedup_summary`.
+
+    ``lockstep`` (default) co-executes each platform's combo x seed guests
+    through :func:`_run_lockstep`: all guests' per-tick VSCAN monitoring
+    (and the other per-interval probes) batch into one vectorized plan
+    execution, cutting physical probe dispatches by ~the guest count while
+    reproducing the sequential reports bit for bit.  Falls back to
+    sequential runs when plans are disabled or the platform's lowering
+    hints forbid lockstep (non-LRU replacement)."""
     from repro.core.platforms import list_platforms
     names = platforms if platforms is not None else list_platforms()
-    return [run_fleet(n, policy=pol, cap=cap, seed=s, **kw)
-            for n in names for pol, cap in combos for s in seeds]
+    reports: List[FleetReport] = []
+    for n in names:
+        sims = [FleetSim(n, policy=pol, cap=cap, seed=s, **kw)
+                for pol, cap in combos for s in seeds]
+        hints = sims[0].lowering or probeplan.DEFAULT_LOWERING
+        if (lockstep and len(sims) > 1 and hints.lockstep
+                and all(s.use_plans and s.use_batch for s in sims)):
+            reports.extend(_run_lockstep(sims))
+        else:
+            reports.extend(sim.run() for sim in sims)
+    return reports
 
 
 def _mean(vals: List[float]) -> float:

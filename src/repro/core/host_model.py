@@ -36,6 +36,22 @@ _STREAM_BUCKET = 512  # pad access streams to multiples of this (compile reuse)
 _LANE_BUCKET = 128    # pad batched-probe lanes (T) to multiples of this
 _BATCH_BUCKET = 8     # pad batched-probe batch dim (B) to multiples of this
 
+# Physical probe-dispatch accounting: one count per jitted access-stream
+# call issued on behalf of guest probing (untimed, timed, batched, and the
+# multi-guest fused paths).  Co-tenant background traffic (`run_cotenants`)
+# is NOT counted — the metric is the cost of *measurement*, the quantity
+# the ProbePlan executor exists to minimize (`benchmarks --only plans`).
+_DISPATCH_STATS = {"probe_dispatches": 0}
+
+
+def probe_dispatch_count() -> int:
+    """Total physical probe dispatches issued process-wide (all hosts)."""
+    return _DISPATCH_STATS["probe_dispatches"]
+
+
+def _count_probe_dispatch() -> None:
+    _DISPATCH_STATS["probe_dispatches"] += 1
+
 
 def _pad_to_bucket(arr: np.ndarray, fill) -> np.ndarray:
     n = len(arr)
@@ -198,15 +214,21 @@ class SimHost:
 
     def _run_streams_batched(self, lanes: Sequence[np.ndarray],
                              cores: Sequence[int],
-                             salt: int = 0) -> List[np.ndarray]:
+                             salt: int = 0,
+                             lane_bucket: Optional[int] = None,
+                             batch_bucket: Optional[int] = None
+                             ) -> List[np.ndarray]:
         """Run B independent block-address streams as measurement lanes in a
         single jitted dispatch (cachesim.access_streams_batched).  Lanes see
         a snapshot of the current machine state; their mutations are not
         committed.  Returns per-lane latency arrays trimmed to lane length.
+        ``lane_bucket``/``batch_bucket`` override the padding granularity
+        (per-platform plan-lowering hints; padding lanes/steps are no-ops).
         """
         n_lanes = len(lanes)
-        pb_lanes = _round_up(n_lanes, _BATCH_BUCKET)
-        t = _round_up(max((len(l) for l in lanes), default=1), _LANE_BUCKET)
+        pb_lanes = _round_up(n_lanes, batch_bucket or _BATCH_BUCKET)
+        t = _round_up(max((len(l) for l in lanes), default=1),
+                      lane_bucket or _LANE_BUCKET)
         blocks = np.full((pb_lanes, t), -1, np.int32)
         lane_cores = np.zeros(pb_lanes, np.int32)
         for i, (lane, core) in enumerate(zip(lanes, cores)):
@@ -306,8 +328,32 @@ class GuestVM:
         core = self.vcpu_cores[vcpu]
         self.stat_accesses += len(blocks)
         self.stat_passes += 1
+        _count_probe_dispatch()
         self.host._run_stream(blocks, np.full(len(blocks), core, np.int32),
                               np.zeros(len(blocks), bool))
+
+    def access_segments(self, segments: Sequence[Tuple[np.ndarray, int]]
+                        ) -> None:
+        """Untimed committed traversal of several per-thread segments fused
+        into ONE dispatch: ``segments`` is a sequence of ``(gvas, vcpu)``
+        pairs executed back to back in order (the multi-vCPU prime of a
+        ProbePlan ``Commit`` op).  State evolution is identical to issuing
+        one :meth:`access` per segment in the same order — the simulator
+        replays the concatenated stream access by access — at 1 dispatch
+        instead of ``len(segments)``."""
+        parts = [(np.atleast_1d(np.asarray(g, np.int64)), v)
+                 for g, v in segments]
+        n = sum(len(g) for g, _ in parts)
+        if n == 0:
+            return
+        blocks = np.concatenate([self._hpa_block(g) for g, _ in parts])
+        cores = np.concatenate(
+            [np.full(len(g), self.vcpu_cores[v], np.int32)
+             for g, v in parts])
+        self.stat_accesses += n
+        self.stat_passes += 1
+        _count_probe_dispatch()
+        self.host._run_stream(blocks, cores, np.zeros(n, bool))
 
     def timed_access(self, gvas: np.ndarray, vcpu: int = 0) -> np.ndarray:
         """Accesses with per-access guest-TSC latencies (noisy when cold)."""
@@ -316,6 +362,7 @@ class GuestVM:
         core = self.vcpu_cores[vcpu]
         self.stat_accesses += len(blocks)
         self.stat_passes += 1
+        _count_probe_dispatch()
         lats = self.host._run_stream(
             blocks, np.full(len(blocks), core, np.int32),
             np.zeros(len(blocks), bool)).astype(np.int64)
@@ -329,7 +376,10 @@ class GuestVM:
         return lats
 
     def timed_access_batch(self, gva_lists: Sequence[np.ndarray],
-                           vcpu=0, salt: int = 0) -> List[np.ndarray]:
+                           vcpu=0, salt: int = 0,
+                           lane_bucket: Optional[int] = None,
+                           batch_bucket: Optional[int] = None
+                           ) -> List[np.ndarray]:
         """Batched multi-set Prime+Probe: B independent timed streams in ONE
         fused dispatch.  ``vcpu`` is a single vcpu id or one per lane;
         ``salt`` re-forks the per-lane rng (vote index for majority voting
@@ -351,11 +401,23 @@ class GuestVM:
         cores = [self.vcpu_cores[v] for v in vcpus]
         self.stat_accesses += sum(len(b) for b in blocks)
         self.stat_passes += 1
-        self._probe_seq += 1
-        eff_salt = (salt * 65537 + self._probe_seq) & 0xFFFFFFFF
+        _count_probe_dispatch()
         out = [l.astype(np.int64)
-               for l in self.host._run_streams_batched(blocks, cores,
-                                                       salt=eff_salt)]
+               for l in self.host._run_streams_batched(
+                   blocks, cores, salt=self._next_salt(salt),
+                   lane_bucket=lane_bucket, batch_bucket=batch_bucket)]
+        self._apply_timer_noise(out)
+        return out
+
+    def _next_salt(self, salt: int) -> int:
+        """Effective per-dispatch rng salt (see ``_probe_seq``)."""
+        self._probe_seq += 1
+        return (salt * 65537 + self._probe_seq) & 0xFFFFFFFF
+
+    def _apply_timer_noise(self, out: List[np.ndarray]) -> None:
+        """Guest-TSC noise for one batched measurement (in place): each
+        lane starts from the current warm level; the batch leaves the
+        timer warm (shared by the single- and multi-guest batched paths)."""
         warm0 = self._timer_warm
         for lats in out:
             warm = warm0
@@ -364,7 +426,6 @@ class GuestVM:
                     lats[i] += self.timer_noise_lat
                 warm += 1
         self._timer_warm = self.timer_warm_reads
-        return out
 
     def warm_timer(self) -> None:
         """Dummy RDTSC reads before a measurement (the paper's §3.1 fix)."""
@@ -403,6 +464,122 @@ class GuestVM:
         blk = int(self._hpa_block(np.array([gva]))[0])
         return cachesim.resident_level(self.host.state, blk,
                                        self.vcpu_cores[vcpu], self.host.geom)
+
+
+# ---------------------------------------------------------------------------
+# Multi-guest fused dispatch (the ProbePlan executor's vmap-over-guests
+# lowering).  Every guest must live on its OWN SimHost with an identical
+# MachineGeometry; per-guest results are bit-identical to issuing the same
+# op through the guest's own single-VM path (integer arithmetic throughout).
+# ---------------------------------------------------------------------------
+
+def _check_multi(vms: Sequence["GuestVM"]) -> MachineGeometry:
+    geoms = {vm.host.geom for vm in vms}
+    if len(geoms) != 1:
+        raise ValueError(f"multi-guest dispatch needs one shared geometry, "
+                         f"got {len(geoms)}")
+    if len({id(vm.host) for vm in vms}) != len(vms):
+        raise ValueError("multi-guest dispatch needs one host per guest")
+    return next(iter(geoms))
+
+
+def commit_segments_multi(vms: Sequence["GuestVM"],
+                          segments_per_vm: Sequence[
+                              Sequence[Tuple[np.ndarray, int]]]) -> None:
+    """Committed traversal for G guests in ONE dispatch: guest i runs (and
+    commits) its own fused segment stream against its own machine state
+    (`cachesim.access_streams_committed`).  The per-guest state evolution
+    equals ``vms[i].access_segments(segments_per_vm[i])``."""
+    geom = _check_multi(vms)
+    per_vm: List[Tuple[np.ndarray, np.ndarray]] = []
+    for vm, segments in zip(vms, segments_per_vm):
+        parts = [(np.atleast_1d(np.asarray(g, np.int64)), v)
+                 for g, v in segments]
+        parts = [(g, v) for g, v in parts if len(g)]
+        if parts:
+            blocks = np.concatenate([vm._hpa_block(g) for g, _ in parts])
+            cores = np.concatenate(
+                [np.full(len(g), vm.vcpu_cores[v], np.int32)
+                 for g, v in parts])
+        else:
+            blocks = np.empty(0, np.int32)
+            cores = np.empty(0, np.int32)
+        per_vm.append((blocks, cores))
+    if not any(len(b) for b, _ in per_vm):
+        return          # standalone access_segments dispatches nothing
+    t = _round_up(max(len(b) for b, _ in per_vm), _STREAM_BUCKET)
+    g_n = len(vms)
+    blocks = np.full((g_n, t), -1, np.int32)
+    cores = np.zeros((g_n, t), np.int32)
+    for i, (b, c) in enumerate(per_vm):
+        blocks[i, :len(b)] = b
+        cores[i, :len(b)] = c
+        if len(b):      # a work-free guest issues no pass standalone
+            vms[i].stat_accesses += len(b)
+            vms[i].stat_passes += 1
+    _count_probe_dispatch()
+    states = cachesim.stack_states([vm.host.state for vm in vms])
+    new_states, _ = cachesim.access_streams_committed(
+        states, geom, jnp.asarray(blocks), jnp.asarray(cores),
+        jnp.zeros((g_n, t), bool))
+    for vm, st in zip(vms, cachesim.unstack_states(new_states, g_n)):
+        vm.host.state = st
+
+
+def timed_access_batch_multi(vms: Sequence["GuestVM"],
+                             lanes_per_vm: Sequence[Sequence[np.ndarray]],
+                             vcpus_per_vm: Sequence[Sequence[int]],
+                             salt: int = 0,
+                             lane_bucket: Optional[int] = None,
+                             batch_bucket: Optional[int] = None
+                             ) -> List[List[np.ndarray]]:
+    """Batched measurement lanes for G guests in ONE dispatch
+    (`cachesim.access_streams_batched_multi`): guest i's lanes probe a
+    snapshot of its own machine state, uncommitted, with its own rng salt
+    (per-guest ``_probe_seq`` advances exactly as a standalone
+    :meth:`GuestVM.timed_access_batch` would, so latencies and guest-TSC
+    noise draws are bit-identical to the single-guest path)."""
+    geom = _check_multi(vms)
+    g_n = len(vms)
+    prepared = []
+    max_b = 1
+    max_t = 1
+    for vm, gva_lists, vcpus in zip(vms, lanes_per_vm, vcpus_per_vm):
+        lanes = [np.atleast_1d(np.asarray(g, np.int64)) for g in gva_lists]
+        blocks = [vm._hpa_block(lane) for lane in lanes]
+        cores = [vm.vcpu_cores[v] for v in vcpus]
+        prepared.append((lanes, blocks, cores))
+        max_b = max(max_b, len(lanes))
+        max_t = max(max_t, max((len(l) for l in lanes), default=1))
+    if not any(lanes for lanes, _, _ in prepared):
+        return [[] for _ in vms]   # standalone path dispatches nothing
+    b_pad = _round_up(max_b, batch_bucket or _BATCH_BUCKET)
+    t_pad = _round_up(max_t, lane_bucket or _LANE_BUCKET)
+    blocks_arr = np.full((g_n, b_pad, t_pad), -1, np.int32)
+    cores_arr = np.zeros((g_n, b_pad), np.int32)
+    salts = np.zeros(g_n, np.uint32)
+    for i, (vm, (lanes, blocks, cores)) in enumerate(zip(vms, prepared)):
+        if not lanes:
+            continue    # empty batch: standalone early-returns untouched
+        for j, (b, c) in enumerate(zip(blocks, cores)):
+            blocks_arr[i, j, :len(b)] = b
+            cores_arr[i, j] = c
+        salts[i] = vm._next_salt(salt)
+        vm.stat_accesses += sum(len(b) for b in blocks)
+        vm.stat_passes += 1
+    _count_probe_dispatch()
+    states = cachesim.stack_states([vm.host.state for vm in vms])
+    lats = np.asarray(cachesim.access_streams_batched_multi(
+        states, geom, jnp.asarray(blocks_arr), jnp.asarray(cores_arr),
+        jnp.zeros((g_n, b_pad), bool), jnp.asarray(salts)))
+    results: List[List[np.ndarray]] = []
+    for i, (vm, (lanes, _, _)) in enumerate(zip(vms, prepared)):
+        out = [lats[i, j, :len(lane)].astype(np.int64)
+               for j, lane in enumerate(lanes)]
+        if lanes:
+            vm._apply_timer_noise(out)
+        results.append(out)
+    return results
 
 
 # -- canned co-tenant generators (paper §6 workload analogues) -----------------

@@ -34,6 +34,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.cachesim import BLOCKS_PER_PAGE, CacheGeometry, MachineGeometry
 from repro.core.host_model import (CotenantWorkload, GuestVM, SimHost,
                                    polluter_gen, zipf_gen)
+from repro.core.probeplan import PlanLowering
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +98,12 @@ class CachePlatform:
                          would pick after discovering a noisy/non-LRU
                          scenario (3 on the shared platform).
     ``prime_reps``       prime repetitions per test, same rationale.
+    ``lowering``         optional per-platform ProbePlan lowering hints
+                         (padding buckets etc.); :meth:`plan_lowering`
+                         derives the effective hints, forcing unfused /
+                         non-lockstep execution on non-LRU replacement
+                         where fused trials would not replay the
+                         sequential path bit for bit.
     """
 
     name: str
@@ -113,6 +120,7 @@ class CachePlatform:
     noise: Tuple[NoiseSpec, ...] = ()
     votes: int = 1
     prime_reps: int = 1
+    lowering: Optional[PlanLowering] = None
 
     def __post_init__(self):
         if self.llc_ways_total == 0:
@@ -151,6 +159,19 @@ class CachePlatform:
         associativity — so hardware L2 filtering is unaffected; the flag
         marks where our abstraction diverges (documented in README)."""
         return self.llc.n_ways >= self.l2.n_ways
+
+    def plan_lowering(self) -> PlanLowering:
+        """Effective ProbePlan lowering hints for this scenario.  Fused
+        committed segments and multi-guest lockstep execution replay the
+        per-dispatch path access for access — exact under LRU; under
+        non-deterministic replacement each fused/padded trial would draw a
+        different (equally valid) replacement sequence, so both are
+        disabled to keep results bit-comparable to the sequential path."""
+        hints = self.lowering or PlanLowering()
+        if self.replacement != "lru":
+            hints = dataclasses.replace(hints, fuse_commits=False,
+                                        lockstep=False)
+        return hints
 
     def machine(self) -> MachineGeometry:
         return MachineGeometry(
@@ -234,6 +255,9 @@ MILAN_CCX = register_platform(CachePlatform(
     l2=SMALL_L2,
     llc=CacheGeometry(n_sets=128, n_ways=16, n_slices=1),
     n_domains=2,
+    # small CCX LLC: monitored-set probe lanes are short (16 lines), so a
+    # finer lane bucket wastes far less padded work per Measure dispatch
+    lowering=PlanLowering(lane_bucket=64),
 ))
 
 # CAT way-partitioned Skylake: the hypervisor allocates 4 of 8 ways to this

@@ -1,0 +1,389 @@
+"""ProbePlan — a declarative probe IR under every measurement.
+
+Every probe the measurement stack performs — MLP priming traversals, timed
+Prime+Probe lanes, majority-voted eviction verdicts, scan-interval waits —
+compiles to a small dataclass program of batched access-stream ops, and ONE
+executor lowers those programs onto the guest probing surface:
+
+  ===========  ==============================================================
+  op           lowering
+  ===========  ==============================================================
+  ``Commit``   committed multi-thread traversal, segments fused into one
+               dispatch (``GuestVM.access_segments`` →
+               ``cachesim.access_stream``); the prime / install / traverse
+               edge of Prime+Probe
+  ``Wait``     scan interval: advance the virtual clock, co-tenants run
+  ``WarmTimer``  dummy RDTSC reads (the paper's §3.1 guest-TSC fix)
+  ``Measure``  B uncommitted timed lanes in one dispatch
+               (``GuestVM.timed_access_batch`` →
+               ``cachesim.access_streams_batched``, the batched multi-set
+               engine the Pallas ``prime_probe`` kernel fast-paths)
+  ``Vote``     majority-voted eviction verdicts: ``votes`` Measure rounds,
+               the vote index salting each lane's rng fork, reduced to one
+               bool per lane (``last-access latency > threshold``)
+  ===========  ==============================================================
+
+Why an IR instead of stage-specific driver loops: plans are *data*.  A
+caller can inspect what a stage is about to probe, :func:`fuse`
+structurally-congruent plans into one program whose ops share dispatches
+(VEV's multi-partition lockstep construction), re-run a plan against fresh
+state, and — the fleet-scale payoff — execute N guests' plans as ONE
+vectorized program via :func:`execute_many`, which vmaps every op over
+guests (``cachesim.access_streams_committed`` /
+``access_streams_batched_multi``): one dispatch per op per *tick*, not per
+guest.  Per-guest results are bit-identical to single-guest execution
+(integer arithmetic end to end; each guest keeps its own machine state,
+rng salt and guest-TSC noise stream).
+
+:class:`PlanLowering` carries the per-platform lowering hints
+(``CachePlatform.plan_lowering()``): whether committed segments may fuse
+(exact under LRU; non-deterministic replacement keeps per-segment
+dispatches so trials replay the sequential path bit for bit), padding
+bucket sizes, and whether multi-guest lockstep execution is allowed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.host_model import (GuestVM, commit_segments_multi,
+                                   timed_access_batch_multi)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanLowering:
+    """Per-platform plan-lowering hints (``CachePlatform.plan_lowering()``).
+
+    ``fuse_commits``   fuse a Commit op's segments into one dispatch.  Exact
+                       under LRU (the stream is replayed access by access in
+                       order); non-LRU platforms keep one dispatch per
+                       segment so replacement trials match the sequential
+                       path bit for bit.
+    ``lane_bucket``    Measure/Vote lane-length padding granularity (T).
+    ``batch_bucket``   Measure/Vote lane-count padding granularity (B).
+    ``lockstep``       whether plans of co-running guests may execute as one
+                       vectorized program (:func:`execute_many`); requires
+                       deterministic (LRU) replacement for bit-identity.
+    """
+
+    fuse_commits: bool = True
+    lane_bucket: int = 128
+    batch_bucket: int = 8
+    lockstep: bool = True
+
+
+DEFAULT_LOWERING = PlanLowering()
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One thread's slice of a committed traversal."""
+
+    gvas: np.ndarray
+    vcpu: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Commit:
+    """Committed access-stream traversal (prime / install / traverse):
+    segments run back to back, each from its own vCPU.  No output."""
+
+    segments: Tuple[Segment, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Wait:
+    """Scan interval: advance the virtual clock by ``ms`` (co-located VMs
+    keep running; the guest TSC goes cold).  No output."""
+
+    ms: float
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmTimer:
+    """Dummy RDTSC reads before a timed probe (§3.1).  No output."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Measure:
+    """B uncommitted timed lanes in one batched dispatch.  Output: a list
+    of per-lane int64 latency arrays (trimmed to lane length)."""
+
+    lanes: Tuple[np.ndarray, ...]
+    vcpus: Tuple[int, ...]
+    salt: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Vote:
+    """Majority-voted eviction verdicts: ``votes`` Measure rounds over the
+    same lanes (vote index = rng salt), each lane's verdict ``last-access
+    latency > threshold``, majority-reduced.  Output: bool array (B,)."""
+
+    lanes: Tuple[np.ndarray, ...]
+    vcpus: Tuple[int, ...]
+    threshold: int
+    votes: int = 1
+
+
+ProbeOp = Union[Commit, Wait, WarmTimer, Measure, Vote]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbePlan:
+    """An ordered program of probe ops plus lowering hints.
+
+    ``meta`` carries stage-private bookkeeping (e.g. VSCAN's lane →
+    monitored-set order) that result appliers need; the executor never
+    reads it.
+    """
+
+    ops: Tuple[ProbeOp, ...]
+    label: str = ""
+    hints: Optional[PlanLowering] = None
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def signature(self) -> Tuple[str, ...]:
+        """Structural signature: op kind per position (congruence key for
+        :func:`fuse` / :func:`execute_many`)."""
+        return tuple(type(op).__name__ for op in self.ops)
+
+    @property
+    def n_dispatches(self) -> int:
+        """Dispatches one (fused) execution of this plan will issue."""
+        n = 0
+        for op in self.ops:
+            if isinstance(op, Commit):
+                n += 1 if any(len(s.gvas) for s in op.segments) else 0
+            elif isinstance(op, Measure):
+                n += 1 if op.lanes else 0
+            elif isinstance(op, Vote):
+                n += op.votes if op.lanes else 0
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    """Per-op outputs of one plan execution (``None`` for output-free
+    ops, aligned with ``plan.ops``)."""
+
+    values: Tuple
+
+    def __getitem__(self, i: int):
+        return self.values[i]
+
+    @property
+    def last(self):
+        """Output of the final op (the probe, by Prime+Probe convention)."""
+        return self.values[-1]
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+def _measure(vm: GuestVM, lanes, vcpus, salt, hints: PlanLowering):
+    if not lanes:
+        return []
+    return vm.timed_access_batch(list(lanes), vcpu=list(vcpus), salt=salt,
+                                 lane_bucket=hints.lane_bucket,
+                                 batch_bucket=hints.batch_bucket)
+
+
+def _vote(vm: GuestVM, op: Vote, hints: PlanLowering) -> np.ndarray:
+    hits = np.zeros(len(op.lanes), np.int64)
+    for vote in range(op.votes):
+        lats = _measure(vm, op.lanes, op.vcpus, vote, hints)
+        hits += np.array([int(l[-1] > op.threshold) for l in lats],
+                         np.int64)
+    return hits * 2 > op.votes
+
+
+def execute(vm: GuestVM, plan: ProbePlan) -> PlanResult:
+    """Run one plan against one guest.  Op order is program order; every
+    batched op is one dispatch (``Vote``: one per vote round)."""
+    hints = plan.hints or DEFAULT_LOWERING
+    out: List = []
+    for op in plan.ops:
+        if isinstance(op, Commit):
+            if hints.fuse_commits:
+                vm.access_segments([(s.gvas, s.vcpu) for s in op.segments])
+            else:
+                for s in op.segments:
+                    if len(s.gvas):
+                        vm.access(s.gvas, vcpu=s.vcpu)
+            out.append(None)
+        elif isinstance(op, Wait):
+            vm.wait_ms(op.ms)
+            out.append(None)
+        elif isinstance(op, WarmTimer):
+            vm.warm_timer()
+            out.append(None)
+        elif isinstance(op, Measure):
+            out.append(_measure(vm, op.lanes, op.vcpus, op.salt, hints))
+        elif isinstance(op, Vote):
+            out.append(_vote(vm, op, hints))
+        else:
+            raise TypeError(f"unknown probe op {op!r}")
+    return PlanResult(values=tuple(out))
+
+
+# ---------------------------------------------------------------------------
+# fusion (same guest: N congruent plans -> one program sharing dispatches)
+# ---------------------------------------------------------------------------
+
+def fuse(plans: Sequence[ProbePlan]) -> Tuple[ProbePlan, List[List[slice]]]:
+    """Merge structurally-congruent plans into one plan whose batched ops
+    share dispatches: Commit segments and Measure/Vote lanes concatenate in
+    plan order (Vote thresholds/votes and Wait durations must agree).
+    Returns ``(fused, spans)`` where ``spans[i][j]`` slices plan ``i``'s
+    share out of fused op ``j``'s output (see :func:`split_result`)."""
+    if not plans:
+        raise ValueError("nothing to fuse")
+    sig = plans[0].signature()
+    for p in plans[1:]:
+        if p.signature() != sig:
+            raise ValueError(f"cannot fuse structurally different plans: "
+                             f"{sig} vs {p.signature()}")
+    ops: List[ProbeOp] = []
+    spans: List[List[slice]] = [[] for _ in plans]
+    for j in range(len(sig)):
+        cur = [p.ops[j] for p in plans]
+        op0 = cur[0]
+        if isinstance(op0, Commit):
+            segs: List[Segment] = []
+            for i, op in enumerate(cur):
+                segs.extend(op.segments)
+                spans[i].append(slice(0, 0))
+            ops.append(Commit(segments=tuple(segs)))
+        elif isinstance(op0, (Measure, Vote)):
+            lanes: List[np.ndarray] = []
+            vcpus: List[int] = []
+            for i, op in enumerate(cur):
+                spans[i].append(slice(len(lanes), len(lanes) + len(op.lanes)))
+                lanes.extend(op.lanes)
+                vcpus.extend(op.vcpus)
+            if isinstance(op0, Vote):
+                if any((op.threshold, op.votes)
+                       != (op0.threshold, op0.votes) for op in cur):
+                    raise ValueError("cannot fuse Votes with different "
+                                     "threshold/votes")
+                ops.append(Vote(lanes=tuple(lanes), vcpus=tuple(vcpus),
+                                threshold=op0.threshold, votes=op0.votes))
+            else:
+                if any(op.salt != op0.salt for op in cur):
+                    raise ValueError("cannot fuse Measures with different "
+                                     "salts")
+                ops.append(Measure(lanes=tuple(lanes), vcpus=tuple(vcpus),
+                                   salt=op0.salt))
+        elif isinstance(op0, Wait):
+            if any(op.ms != op0.ms for op in cur):
+                raise ValueError("cannot fuse Waits of different lengths")
+            ops.append(op0)
+            for s in spans:
+                s.append(slice(0, 0))
+        else:   # WarmTimer
+            ops.append(op0)
+            for s in spans:
+                s.append(slice(0, 0))
+    fused = ProbePlan(ops=tuple(ops),
+                      label="+".join(dict.fromkeys(p.label for p in plans)),
+                      hints=plans[0].hints)
+    return fused, spans
+
+
+def split_result(result: PlanResult,
+                 spans: List[List[slice]]) -> List[PlanResult]:
+    """Undo :func:`fuse`: slice each constituent plan's outputs back out of
+    the fused execution's result."""
+    out = []
+    for plan_spans in spans:
+        vals = []
+        for v, sl in zip(result.values, plan_spans):
+            vals.append(None if v is None else v[sl])
+        out.append(PlanResult(values=tuple(vals)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vectorized execution over guests
+# ---------------------------------------------------------------------------
+
+def execute_many(vms: Sequence[GuestVM],
+                 plans: Sequence[ProbePlan]) -> List[PlanResult]:
+    """Run G structurally-congruent plans — one per guest, each guest on
+    its own host — as ONE vectorized program: every Commit / Measure is a
+    single dispatch vmapped over guests (``Vote``: one per vote round);
+    Wait / WarmTimer apply per guest (each guest keeps its own window).
+    Per-guest results are bit-identical to ``execute(vms[i], plans[i])``
+    under deterministic (LRU) replacement — the ``PlanLowering.lockstep``
+    hint gates callers accordingly."""
+    if len(vms) != len(plans):
+        raise ValueError("one plan per guest")
+    if not plans:
+        return []
+    if len(plans) == 1:
+        return [execute(vms[0], plans[0])]
+    sig = plans[0].signature()
+    for p in plans[1:]:
+        if p.signature() != sig:
+            raise ValueError(f"cannot co-execute structurally different "
+                             f"plans: {sig} vs {p.signature()}")
+    hints = plans[0].hints or DEFAULT_LOWERING
+    outs: List[List] = [[] for _ in plans]
+    for j, kind in enumerate(sig):
+        ops = [p.ops[j] for p in plans]
+        if kind == "Commit":
+            commit_segments_multi(
+                vms, [[(s.gvas, s.vcpu) for s in op.segments]
+                      for op in ops])
+            for o in outs:
+                o.append(None)
+        elif kind == "Wait":
+            for vm, op in zip(vms, ops):
+                vm.wait_ms(op.ms)
+            for o in outs:
+                o.append(None)
+        elif kind == "WarmTimer":
+            for vm in vms:
+                vm.warm_timer()
+            for o in outs:
+                o.append(None)
+        elif kind == "Measure":
+            if any(op.salt != ops[0].salt for op in ops):
+                raise ValueError("cannot co-execute Measures with "
+                                 "different salts")
+            res = timed_access_batch_multi(
+                vms, [op.lanes for op in ops], [op.vcpus for op in ops],
+                salt=ops[0].salt, lane_bucket=hints.lane_bucket,
+                batch_bucket=hints.batch_bucket)
+            for o, r in zip(outs, res):
+                o.append(r)
+        elif kind == "Vote":
+            op0 = ops[0]
+            if any((op.threshold, op.votes) != (op0.threshold, op0.votes)
+                   for op in ops):
+                raise ValueError("cannot co-execute Votes with different "
+                                 "threshold/votes")
+            hits = [np.zeros(len(op.lanes), np.int64) for op in ops]
+            for vote in range(op0.votes):
+                res = timed_access_batch_multi(
+                    vms, [op.lanes for op in ops],
+                    [op.vcpus for op in ops], salt=vote,
+                    lane_bucket=hints.lane_bucket,
+                    batch_bucket=hints.batch_bucket)
+                for h, lats, op in zip(hits, res, ops):
+                    h += np.array([int(l[-1] > op.threshold)
+                                   for l in lats], np.int64)
+            for o, h in zip(outs, hits):
+                o.append(h * 2 > op0.votes)
+        else:
+            raise TypeError(f"unknown probe op kind {kind}")
+    return [PlanResult(values=tuple(o)) for o in outs]

@@ -29,13 +29,11 @@ import dataclasses
 import io
 import json
 import time
-import warnings
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.abstraction import (CacheXSession, ProbeConfig,
-                                    _build_colors, _build_vscan)
+from repro.core.abstraction import CacheXSession, ProbeConfig
 from repro.core.cap import CapAllocator
 from repro.core.cas import TierTracker
 from repro.core.host_model import CotenantWorkload, GuestVM, SimHost, \
@@ -126,47 +124,11 @@ class CacheXReport:
 
 
 # ---------------------------------------------------------------------------
-# deprecated stage shims (pre-CacheXSession API; see docs/MIGRATION.md)
-# ---------------------------------------------------------------------------
-
-def build_color_stage(vm, plat: CachePlatform, seed: int,
-                      use_batch: bool = True):
-    """Deprecated: use ``CacheXSession.attach(vm, plat, config).colors()``.
-
-    Kept as a one-release shim for pre-session callers; returns the raw
-    ``(vcol, cf)`` pair the session now owns."""
-    warnings.warn(
-        "build_color_stage is deprecated; attach a CacheXSession and use "
-        "session.colors() (docs/MIGRATION.md)",
-        DeprecationWarning, stacklevel=2)
-    cfg = ProbeConfig.for_platform(plat, use_batch=use_batch, seed=seed)
-    return _build_colors(vm, plat, cfg)
-
-
-def build_vscan_stage(vm, plat: CachePlatform, vcol, cf, seed: int,
-                      use_batch: bool = True, f: int = 2, offsets=(0,),
-                      domain_vcpus: Optional[Dict[int, List[int]]] = None,
-                      pool_pages=None, prune_conflicts: bool = False):
-    """Deprecated: use ``CacheXSession`` (``monitored_sets()`` /
-    ``refresh()``), which owns VSCAN construction and pool sizing via
-    :class:`~repro.core.abstraction.ProbeConfig`.
-
-    Kept as a one-release shim; returns ``(vscan, build_info,
-    domain_vcpus)`` like the pre-session helper."""
-    warnings.warn(
-        "build_vscan_stage is deprecated; attach a CacheXSession and use "
-        "session.monitored_sets()/refresh() (docs/MIGRATION.md)",
-        DeprecationWarning, stacklevel=2)
-    cfg = ProbeConfig.for_platform(
-        plat, use_batch=use_batch, seed=seed, f=f, offsets=tuple(offsets),
-        prune_self_conflicts=prune_conflicts)
-    return _build_vscan(vm, plat, vcol, cf, cfg,
-                        domain_vcpus=domain_vcpus, pool_pages=pool_pages)
-
-
-# ---------------------------------------------------------------------------
 # the one-shot driver
 # ---------------------------------------------------------------------------
+# (The PR-3 `build_color_stage`/`build_vscan_stage` DeprecationWarning shims
+# are gone — docs/MIGRATION.md maps the old stage drivers to session
+# queries and, since the ProbePlan redesign, to plan()/execute().)
 
 def run_cachex(platform: Union[str, CachePlatform],
                seed: Optional[int] = None,

@@ -42,6 +42,9 @@ from repro.core.cachesim import LLC_MISS_THRESHOLD
 from repro.core.color import ColorFilters, VCOL
 from repro.core.eviction import VEV, EvictionSet, build_many
 from repro.core.host_model import GuestVM
+from repro.core import probeplan
+from repro.core.probeplan import (Commit, Measure, PlanLowering, PlanResult,
+                                  ProbePlan, Segment, Wait, WarmTimer)
 
 DEFAULT_WINDOW_MS = 7.0
 MIN_WINDOW_MS = 1.0
@@ -78,7 +81,8 @@ class VScan:
     def __init__(self, vm: GuestVM, monitored: List[MonitoredSet],
                  window_ms: float = DEFAULT_WINDOW_MS,
                  ewma_alpha: float = 0.3, n_pairs: int = 1,
-                 use_batch: bool = True):
+                 use_batch: bool = True, use_plans: bool = True,
+                 lowering: Optional[PlanLowering] = None):
         self.vm = vm
         self.monitored = monitored
         self.window_ms = window_ms
@@ -89,6 +93,13 @@ class VScan:
         # multi-set Prime+Probe dispatch (Table 6); False keeps the seed
         # one-dispatch-per-set probe loop for benchmarking.
         self.use_batch = use_batch
+        # use_plans compiles each interval to a ProbePlan (fused multi-vCPU
+        # prime Commit + Wait + timed probe Measure) executed by
+        # `probeplan.execute` — the route `monitor_plan()`/`apply_monitor()`
+        # expose so a fleet harness can co-execute many guests' intervals;
+        # False keeps the pre-plan per-prober prime loop (parity reference).
+        self.use_plans = use_plans
+        self.lowering = lowering
         self.ewma = np.zeros(len(monitored))
         self.history: List[VScanSnapshot] = []
 
@@ -101,7 +112,9 @@ class VScan:
               window_ms: float = DEFAULT_WINDOW_MS,
               ewma_alpha: float = 0.3,
               use_batch: bool = True,
-              prime_reps: int = 1) -> Tuple["VScan", Dict]:
+              prime_reps: int = 1, use_plans: bool = True,
+              lowering: Optional[PlanLowering] = None
+              ) -> Tuple["VScan", Dict]:
         """Split pool into color groups, partition by offset, build f sets
         per partition per domain.  Returns (vscan, build_info)."""
         colors = vcol.identify_colors_parallel(cf, pool_pages)
@@ -127,7 +140,8 @@ class VScan:
         # fused dispatches (Fig 6 parallel construction)
         results, _, _ = build_many(vm, jobs, "llc", ways, votes=votes,
                                    seed=seed, use_batch=use_batch,
-                                   prime_reps=prime_reps)
+                                   prime_reps=prime_reps,
+                                   use_plans=use_plans, lowering=lowering)
         for (domain, vcpu, color), sets in zip(job_meta, results):
             if not sets:
                 info["failed_partitions"] += 1
@@ -136,7 +150,8 @@ class VScan:
                     es=es, color=color, domain=domain, vcpu=vcpu))
                 info["built"] += 1
         return cls(vm, monitored, window_ms=window_ms,
-                   ewma_alpha=ewma_alpha, use_batch=use_batch), info
+                   ewma_alpha=ewma_alpha, use_batch=use_batch,
+                   use_plans=use_plans, lowering=lowering), info
 
     # -- persistence (the `CacheXSession` export contract) ---------------------
     def state_dict(self) -> Dict:
@@ -156,14 +171,16 @@ class VScan:
 
     @classmethod
     def from_state(cls, vm: GuestVM, state: Dict,
-                   use_batch: bool = True) -> "VScan":
+                   use_batch: bool = True, use_plans: bool = True,
+                   lowering: Optional[PlanLowering] = None) -> "VScan":
         monitored = [MonitoredSet(es=EvictionSet.from_state(m["es"]),
                                   color=int(m["color"]),
                                   domain=int(m["domain"]),
                                   vcpu=int(m["vcpu"]))
                      for m in state["monitored"]]
         vs = cls(vm, monitored, window_ms=float(state["default_window_ms"]),
-                 ewma_alpha=float(state["ewma_alpha"]), use_batch=use_batch)
+                 ewma_alpha=float(state["ewma_alpha"]), use_batch=use_batch,
+                 use_plans=use_plans, lowering=lowering)
         vs.window_ms = float(state["window_ms"])
         return vs
 
@@ -207,38 +224,55 @@ class VScan:
                     frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
         return frac
 
-    def prune_self_conflicts(self, max_frac: float = 0.5) -> int:
-        """Drop monitored sets that VSCAN's *own priming* evicts.
+    # -- plan emission (the ProbePlan route) -----------------------------------
+    def _interval_ops(self, by_prober: Dict[int, List[int]],
+                      window_ms: Optional[float]
+                      ) -> Tuple[Tuple, List[int]]:
+        """Ops of one interval: fused multi-vCPU prime Commit, optional
+        Wait, warm-up, reverse-order timed probe Measure.  Returns
+        (ops, lane order → monitored index)."""
+        order = [i for idxs in by_prober.values() for i in idxs]
+        prime = Commit(segments=tuple(
+            Segment(gvas=np.concatenate(
+                [self.monitored[i].es.gvas for i in idxs]), vcpu=vcpu)
+            for vcpu, idxs in by_prober.items()))
+        probe = Measure(
+            lanes=tuple(self.monitored[i].es.gvas[::-1] for i in order),
+            vcpus=tuple(self.monitored[i].vcpu for i in order))
+        ops: Tuple = (prime,)
+        if window_ms is not None:
+            ops += (Wait(ms=window_ms),)
+        ops += (WarmTimer(), probe)
+        return ops, order
 
-        Zero-wait prime -> probe: with no window for co-tenant traffic, any
-        set showing evictions is being thrashed by another monitored set
-        sharing its (set, slice) cell — which happens when the LLC exposes
-        fewer set-index rows than there are virtual colors (e.g. a small
-        CCX LLC: 128 sets = 2 rows for 4 colors), so two colors' minimal
-        sets land congruent and 2x`ways` lines fight over `ways` ways.
-        The later-primed set of each conflicting pair survives and keeps
-        the shared cell covered.  Purely guest-side (no hypercall), run
-        once after construction.  Returns the number of sets dropped."""
-        if not self.monitored:
-            return 0
-        by_prober = self._by_prober()
-        self._prime(by_prober)
-        frac = self._probe(by_prober)
-        keep = frac <= max_frac
-        dropped = int((~keep).sum())
-        if dropped:
-            self.monitored = [m for m, k in zip(self.monitored, keep) if k]
-            self.ewma = self.ewma[keep]
-        return dropped
+    def monitor_plan(self) -> ProbePlan:
+        """Compile one monitoring interval — prime every monitored set,
+        wait the current window, probe each set reverse-order timed — to a
+        ProbePlan.  Execute with `probeplan.execute` (or co-execute many
+        guests' plans with `probeplan.execute_many`) and feed the result to
+        :meth:`apply_monitor`."""
+        ops, order = self._interval_ops(self._by_prober(), self.window_ms)
+        return ProbePlan(ops=ops, label="vscan.monitor",
+                         hints=self.lowering,
+                         meta={"order": order, "window_ms": self.window_ms})
 
-    def monitor_once(self) -> VScanSnapshot:
-        """Prime -> wait(window) -> probe (reverse order, timed)."""
-        by_prober = self._by_prober()
-        self._prime(by_prober)
-        self.vm.wait_ms(self.window_ms)
-        frac = self._probe(by_prober)
+    def _frac_from_lanes(self, order: List[int],
+                         lat_lanes: List[np.ndarray]) -> np.ndarray:
+        frac = np.zeros(len(self.monitored))
+        for i, lats in zip(order, lat_lanes):
+            frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
+        return frac
 
-        rate = 100.0 * frac / max(self.window_ms, 1e-9)     # % lines / ms
+    def apply_monitor(self, plan: ProbePlan,
+                      result: PlanResult) -> VScanSnapshot:
+        """Consume one executed monitor plan: per-set eviction fractions →
+        rate normalization → EWMA → window auto-adjustment (§3.3)."""
+        frac = self._frac_from_lanes(plan.meta["order"], result.last)
+        return self._finish_interval(frac, plan.meta["window_ms"])
+
+    def _finish_interval(self, frac: np.ndarray,
+                         window_ms: float) -> VScanSnapshot:
+        rate = 100.0 * frac / max(window_ms, 1e-9)          # % lines / ms
         self.ewma = (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * rate
 
         # window auto-adjustment (§3.3): shrink on full eviction across sets,
@@ -254,6 +288,53 @@ class VScan:
                              time_ms=self.vm.host.time_ms)
         self.history.append(snap)
         return snap
+
+    def prune_self_conflicts(self, max_frac: float = 0.5) -> int:
+        """Drop monitored sets that VSCAN's *own priming* evicts.
+
+        Zero-wait prime -> probe: with no window for co-tenant traffic, any
+        set showing evictions is being thrashed by another monitored set
+        sharing its (set, slice) cell — which happens when the LLC exposes
+        fewer set-index rows than there are virtual colors (e.g. a small
+        CCX LLC: 128 sets = 2 rows for 4 colors), so two colors' minimal
+        sets land congruent and 2x`ways` lines fight over `ways` ways.
+        The later-primed set of each conflicting pair survives and keeps
+        the shared cell covered.  Purely guest-side (no hypercall), run
+        once after construction.  Returns the number of sets dropped."""
+        if not self.monitored:
+            return 0
+        by_prober = self._by_prober()
+        if self.use_batch and self.use_plans:
+            ops, order = self._interval_ops(by_prober, window_ms=None)
+            plan = ProbePlan(ops=ops, label="vscan.prune",
+                             hints=self.lowering)
+            frac = self._frac_from_lanes(
+                order, probeplan.execute(self.vm, plan).last)
+        else:
+            self._prime(by_prober)
+            frac = self._probe(by_prober)
+        keep = frac <= max_frac
+        dropped = int((~keep).sum())
+        if dropped:
+            self.monitored = [m for m, k in zip(self.monitored, keep) if k]
+            self.ewma = self.ewma[keep]
+        return dropped
+
+    def monitor_once(self) -> VScanSnapshot:
+        """Prime -> wait(window) -> probe (reverse order, timed).  One
+        ProbePlan execution on the default route (2 dispatches: fused
+        multi-vCPU prime + fused probe); the pre-plan per-prober prime
+        loop survives behind ``use_plans=False`` as the parity reference,
+        and ``use_batch=False`` keeps the seed one-dispatch-per-set
+        probe."""
+        if self.use_batch and self.use_plans:
+            plan = self.monitor_plan()
+            return self.apply_monitor(plan, probeplan.execute(self.vm, plan))
+        by_prober = self._by_prober()
+        self._prime(by_prober)
+        self.vm.wait_ms(self.window_ms)
+        frac = self._probe(by_prober)
+        return self._finish_interval(frac, self.window_ms)
 
     # -- aggregation (consumed by CAS / CAP) -------------------------------------
     def per_domain_rate(self) -> Dict[int, float]:

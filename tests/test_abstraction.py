@@ -10,7 +10,7 @@ Covers the tentpole end to end:
   * contention staleness metadata, interval-driven re-probe, and
     subscribe/unsubscribe publication to CAS/CAP-style consumers;
   * the `run_cachex` burst-cotenant cleanup regression (satellite bugfix)
-    and the deprecated stage-builder shims;
+    and the *removal* of the deprecated stage-builder shims;
   * the public-API snapshot of `repro.core` (fails when the exported
     surface changes without updating tests/data/core_api_snapshot.txt).
 """
@@ -30,8 +30,7 @@ from repro.core import (CacheXSession, ProbeConfig, get_platform,
 from repro.core.abstraction import VSCAN_POOL_CAP_PAGES
 from repro.core.eviction import C_POOL_SCALE
 from repro.core.host_model import CotenantWorkload, polluter_gen
-from repro.core.runner import (CacheXReport, build_color_stage,
-                               build_vscan_stage)
+from repro.core.runner import CacheXReport
 
 FAST_PLATFORM = "skylake_sp"   # tier-1; the rest of the matrix is `slow`
 SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__), "data",
@@ -284,18 +283,17 @@ def test_remove_cotenant():
         host.remove_cotenant("tmp")
 
 
-def test_deprecated_stage_shims_warn_and_delegate():
-    plat = get_platform(FAST_PLATFORM)
-    host, vm = plat.make_host_vm(seed=4)
-    with pytest.warns(DeprecationWarning):
-        vcol, cf = build_color_stage(vm, plat, seed=4)
-    assert cf.n_colors == plat.n_l2_colors
-    with pytest.warns(DeprecationWarning):
-        vs, info, domain_vcpus = build_vscan_stage(vm, plat, vcol, cf,
-                                                   seed=4)
-    assert len(vs.monitored) > 0
-    assert domain_vcpus == {d: [d * plat.cores_per_domain]
-                            for d in range(plat.n_domains)}
+def test_deprecated_stage_shims_are_gone():
+    """The PR-3 one-release DeprecationWarning shims are removed: importing
+    them must fail, per docs/MIGRATION.md (stage drivers → session
+    queries / plans)."""
+    import repro.core.runner as runner
+    for name in ("build_color_stage", "build_vscan_stage"):
+        assert not hasattr(runner, name), name
+        assert not hasattr(core, name), name
+        assert name not in core.__all__
+        with pytest.raises(ImportError):
+            exec(f"from repro.core.runner import {name}")
 
 
 def test_report_csv_is_generated_from_dataclass_fields():

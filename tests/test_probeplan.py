@@ -1,0 +1,315 @@
+"""ProbePlan IR + executor tests (the api_redesign tentpole).
+
+Covers:
+  * executor unit semantics — Commit segment fusion (one dispatch,
+    state-identical to per-segment traversals), Measure lane trimming,
+    Vote majority verdicts vs the pre-plan `_majority_verdicts` reference,
+    Wait/WarmTimer side effects;
+  * plan fusion — `fuse` merges structurally congruent plans into one
+    program sharing dispatches and `split_result` restores per-plan
+    outputs bit for bit;
+  * `execute_many` — G guests' plans as one vectorized program: shapes
+    with heterogeneous lane counts, bit-identical per-guest results and
+    machine states vs single-guest execution, congruence/shared-host
+    guards;
+  * plan-vs-legacy parity, property-style: the whole VEV/VCOL/VSCAN
+    pipeline (`run_cachex`) with `use_plans=True` must reproduce the
+    pre-redesign path's report field for field on every platform (tier-1:
+    skylake_sp; rest `slow`), and the closed-loop fleet must reproduce its
+    reports across legacy / plan / lockstep execution while the lockstep
+    matrix issues >= 2x fewer physical probe dispatches per tick.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cachesim, probeplan
+from repro.core.abstraction import ProbeConfig
+from repro.core.eviction import VEV, _majority_verdicts, _probe_lanes
+from repro.core.host_model import probe_dispatch_count
+from repro.core.platforms import get_platform, list_platforms
+from repro.core.probeplan import (Commit, Measure, PlanLowering, ProbePlan,
+                                  Segment, Vote, Wait, WarmTimer)
+from repro.core.runner import run_cachex
+from tests.conftest import make_vm
+
+FAST_PLATFORM = "skylake_sp"
+
+
+def _matrix_params():
+    return [name if name == FAST_PLATFORM
+            else pytest.param(name, marks=pytest.mark.slow)
+            for name in list_platforms()]
+
+
+def _twin_vms(n=2, seed=7, **kw):
+    """n identically-booted (host, vm) pairs: same seeds => same hidden
+    page tables and machine states, so state evolutions are comparable."""
+    return [make_vm(seed=seed, **kw) for _ in range(n)]
+
+
+def _states_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# executor units
+# ---------------------------------------------------------------------------
+
+def test_commit_fuses_segments_into_one_dispatch():
+    (h1, vm1), (h2, vm2) = _twin_vms()
+    pages = vm1.alloc_pages(8)
+    vm2.alloc_pages(8)                      # twin allocator stays in sync
+    seg_a = np.array([vm1.gva(int(p), 0) for p in pages[:4]])
+    seg_b = np.array([vm1.gva(int(p), 64) for p in pages[4:]])
+    plan = ProbePlan(ops=(Commit(segments=(Segment(seg_a, 0),
+                                           Segment(seg_b, 1))),))
+    probeplan.execute(vm1, plan)
+    assert vm1.stat_passes == 1             # both segments, ONE dispatch
+    # reference: per-segment committed traversals on the twin
+    vm2.access(seg_a, vcpu=0)
+    vm2.access(seg_b, vcpu=1)
+    assert vm2.stat_passes == 2
+    # same machine end state (padding no-ops only shift the LRU clock,
+    # compare the tag arrays which encode all cache contents)
+    _states_equal(h1.state["l2"][0], h2.state["l2"][0])
+    _states_equal(h1.state["llc"][0], h2.state["llc"][0])
+
+
+def test_commit_unfused_hint_keeps_per_segment_dispatches():
+    host, vm = make_vm(seed=9)
+    pages = vm.alloc_pages(4)
+    segs = tuple(Segment(np.array([vm.gva(int(p), 0)]), 0) for p in pages)
+    plan = ProbePlan(ops=(Commit(segments=segs),),
+                     hints=PlanLowering(fuse_commits=False))
+    probeplan.execute(vm, plan)
+    assert vm.stat_passes == len(segs)      # legacy one-per-segment route
+
+
+def test_wait_and_warm_ops_drive_vm_side_effects():
+    host, vm = make_vm(seed=11)
+    t0 = host.time_ms
+    probeplan.execute(vm, ProbePlan(ops=(Wait(ms=5.0), WarmTimer())))
+    assert host.time_ms == t0 + 5.0
+    assert vm._timer_warm == vm.timer_warm_reads
+
+
+def test_measure_returns_trimmed_per_lane_latencies():
+    host, vm = make_vm(seed=13)
+    pages = vm.alloc_pages(6)
+    lanes = tuple(np.array([vm.gva(int(p), 0) for p in pages[:n]])
+                  for n in (1, 4, 6))
+    res = probeplan.execute(vm, ProbePlan(
+        ops=(WarmTimer(), Measure(lanes=lanes, vcpus=(0, 0, 0))),))
+    assert [len(l) for l in res.last] == [1, 4, 6]
+    assert vm.stat_passes == 1
+
+
+def test_vote_matches_pre_plan_majority_verdicts():
+    """The executor's Vote lowering must reach exactly the verdicts of the
+    pre-plan `_majority_verdicts` reference on identical tests (LRU:
+    measurement lanes are uncommitted, so back-to-back runs see the same
+    snapshot)."""
+    host, vm = make_vm(seed=15)
+    vev = VEV(vm, use_plans=False)
+    pages = vm.alloc_pages(256)
+    target = vm.gva(int(pages[0]), 0)
+    key = vm.hypercall_llc_setslice(target)
+    cong = [vm.gva(int(p), 0) for p in pages[1:]
+            if vm.hypercall_llc_setslice(vm.gva(int(p), 0)) == key]
+    other = [vm.gva(int(p), 0) for p in pages[1:]
+             if vm.hypercall_llc_setslice(vm.gva(int(p), 0)) != key]
+    ways = host.geom.llc.n_ways
+    tests = [(target, np.array(cong[:ways + 2])),
+             (target, np.array(other[:2 * ways]))]
+    thr = VEV._threshold("llc")
+    ref = _majority_verdicts(vm, _probe_lanes(tests, 1), 0, thr, votes=3)
+    plan = ProbePlan(ops=(Vote(lanes=tuple(_probe_lanes(tests, 1)),
+                               vcpus=(0, 0), threshold=thr, votes=3),))
+    got = probeplan.execute(vm, plan).last
+    np.testing.assert_array_equal(ref, got)
+    assert list(got) == [True, False]
+
+
+# ---------------------------------------------------------------------------
+# fusion
+# ---------------------------------------------------------------------------
+
+def test_fuse_and_split_roundtrip_shares_dispatches():
+    (h1, vm1), (h2, vm2) = _twin_vms(seed=17)
+    pages = vm1.alloc_pages(64)
+    vm2.alloc_pages(64)
+    thr = VEV._threshold("llc")
+
+    def plans_for(vm):
+        lanes = [np.array([vm.gva(int(p), 0) for p in pages[a:b]])
+                 for a, b in ((0, 20), (20, 44), (44, 64))]
+        return [ProbePlan(ops=(Vote(lanes=(l,), vcpus=(0,),
+                                    threshold=thr, votes=2),))
+                for l in lanes]
+
+    fused, spans = probeplan.fuse(plans_for(vm1))
+    assert fused.signature() == ("Vote",)
+    split = probeplan.split_result(probeplan.execute(vm1, fused), spans)
+    assert vm1.stat_passes == 2             # one dispatch per vote, fused
+    singles = [probeplan.execute(vm2, p) for p in plans_for(vm2)]
+    assert vm2.stat_passes == 6             # 3 plans x 2 votes, unfused
+    for s, r in zip(split, singles):
+        np.testing.assert_array_equal(s.last, r.last)
+
+
+def test_fuse_rejects_structural_mismatch():
+    lane = (np.array([1, 2]),)
+    vote = ProbePlan(ops=(Vote(lanes=lane, vcpus=(0,), threshold=1),))
+    measure = ProbePlan(ops=(Measure(lanes=lane, vcpus=(0,)),))
+    with pytest.raises(ValueError):
+        probeplan.fuse([vote, measure])
+    other = ProbePlan(ops=(Vote(lanes=lane, vcpus=(0,), threshold=1,
+                                votes=5),))
+    with pytest.raises(ValueError):
+        probeplan.fuse([vote, other])
+
+
+# ---------------------------------------------------------------------------
+# execute_many: vmap over guests
+# ---------------------------------------------------------------------------
+
+def test_execute_many_matches_single_execution_bitwise():
+    """G guests with *different* states and lane counts co-execute as one
+    vectorized program; every guest's latencies AND committed machine state
+    must equal its standalone execution (the property the fleet's lockstep
+    bit-identity rests on)."""
+    seeds = (21, 22, 23)
+    joint = [make_vm(seed=s) for s in seeds]
+    solo = [make_vm(seed=s) for s in seeds]
+
+    def plan_for(vm, n_lanes):
+        pages = vm.alloc_pages(16)
+        prime = np.array([vm.gva(int(p), 0) for p in pages])
+        lanes = tuple(np.array([vm.gva(int(p), 64) for p in pages[:2 + i]])
+                      for i in range(n_lanes))
+        return ProbePlan(ops=(Commit(segments=(Segment(prime, 0),)),
+                              Wait(ms=2.0), WarmTimer(),
+                              Measure(lanes=lanes,
+                                      vcpus=(0,) * n_lanes)),
+                         label="t.monitor")
+
+    lane_counts = (0, 3, 5)                  # heterogeneous (incl. empty)
+    jplans = [plan_for(vm, n) for (_, vm), n in zip(joint, lane_counts)]
+    splans = [plan_for(vm, n) for (_, vm), n in zip(solo, lane_counts)]
+    before = probe_dispatch_count()
+    jres = probeplan.execute_many([vm for _, vm in joint], jplans)
+    assert probe_dispatch_count() - before == 2   # Commit + Measure, fused
+    sres = [probeplan.execute(vm, p) for (_, vm), p in zip(solo, splans)]
+    for (jh, jvm), (sh, svm), jr, sr, n in zip(joint, solo, jres, sres,
+                                               lane_counts):
+        assert len(jr.last) == n
+        for a, b in zip(jr.last, sr.last):
+            np.testing.assert_array_equal(a, b)
+        _states_equal(jh.state["l2"][0], sh.state["l2"][0])
+        _states_equal(jh.state["llc"][0], sh.state["llc"][0])
+        assert jh.time_ms == sh.time_ms
+        # per-guest cost accounting and rng-salt sequencing must match the
+        # standalone path exactly (a lane-less guest issues no measure
+        # pass and keeps its _probe_seq untouched)
+        assert jvm.stat_passes == svm.stat_passes
+        assert jvm.stat_accesses == svm.stat_accesses
+        assert jvm._probe_seq == svm._probe_seq
+
+
+def test_execute_many_guards():
+    (h1, vm1), (h2, vm2) = _twin_vms(seed=25)
+    lane = (np.array([vm1.gva(0, 0)]),)
+    vote = ProbePlan(ops=(Vote(lanes=lane, vcpus=(0,), threshold=1),))
+    measure = ProbePlan(ops=(Measure(lanes=lane, vcpus=(0,)),))
+    with pytest.raises(ValueError):
+        probeplan.execute_many([vm1, vm2], [vote, measure])
+    with pytest.raises(ValueError):          # one host per guest
+        probeplan.execute_many([vm1, vm1], [measure, measure])
+    with pytest.raises(ValueError):
+        probeplan.execute_many([vm1], [measure, measure])
+    salted = ProbePlan(ops=(Measure(lanes=lane, vcpus=(0,), salt=3),))
+    with pytest.raises(ValueError):          # rng salts must agree
+        probeplan.execute_many([vm1, vm2], [measure, salted])
+
+
+def test_fleet_seed_unbatched_reference_keeps_per_dispatch_route():
+    """`use_batch=False` is the seed per-dispatch benchmark reference:
+    plans are inherently batched, so the fleet loop must fall back to the
+    pre-plan route exactly like session.refresh / VScan.monitor_once do."""
+    from repro.core.fleet import FleetSim
+    assert not FleetSim(FAST_PLATFORM, n_intervals=0,
+                        use_batch=False)._plan_route
+    assert FleetSim(FAST_PLATFORM, n_intervals=0)._plan_route
+
+
+def test_stack_unstack_states_roundtrip():
+    (h1, _), (h2, _) = _twin_vms(seed=27)
+    h2.state["clock"] = h2.state["clock"] + 7
+    stacked = cachesim.stack_states([h1.state, h2.state])
+    back = cachesim.unstack_states(stacked, 2)
+    _states_equal(back[0], h1.state)
+    _states_equal(back[1], h2.state)
+
+
+# ---------------------------------------------------------------------------
+# plan vs pre-redesign parity (property-style, per platform)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", _matrix_params())
+def test_pipeline_plan_vs_legacy_parity(name):
+    """VEV + VCOL + VSCAN + CAS/CAP through `run_cachex`: the ProbePlan
+    route must reproduce the pre-redesign path's report field for field
+    (everything except dispatch/wall cost — fused commits are the point)."""
+    plat = get_platform(name)
+    reports = {}
+    for use_plans in (True, False):
+        cfg = ProbeConfig.for_platform(plat, seed=3, use_plans=use_plans)
+        reports[use_plans] = run_cachex(plat, monitor_intervals=2,
+                                        config=cfg)
+    a, b = reports[True], reports[False]
+    for f in dataclasses.fields(type(a)):
+        if f.name in ("dispatches", "wall_s"):
+            continue
+        assert getattr(a, f.name) == getattr(b, f.name), f.name
+    assert a.dispatches <= b.dispatches      # fusion never adds dispatches
+
+
+def test_fleet_lockstep_parity_and_dispatch_reduction():
+    """The fleet acceptance property: lockstep multi-guest execution
+    reproduces every report metric bit for bit vs both the sequential plan
+    path and the pre-plan legacy path, while issuing >= 2x fewer physical
+    probe dispatches per tick than the legacy per-guest loop."""
+    from repro.core.fleet import FleetSim, _run_lockstep
+    combos = (("eevdf", "on"), ("cas", "on"), ("cas", "off"))
+    kw = dict(n_intervals=6, warmup=2, seed=0)
+
+    legacy_sims = [FleetSim(FAST_PLATFORM, policy=p, cap=c,
+                            use_plans=False, **kw) for p, c in combos]
+    d0 = probe_dispatch_count()
+    legacy = [s.run() for s in legacy_sims]
+    legacy_loop = probe_dispatch_count() - d0
+
+    seq = [FleetSim(FAST_PLATFORM, policy=p, cap=c, **kw).run()
+           for p, c in combos]
+
+    lock_sims = [FleetSim(FAST_PLATFORM, policy=p, cap=c, **kw)
+                 for p, c in combos]
+    d0 = probe_dispatch_count()
+    lock = _run_lockstep(lock_sims)
+    lock_loop = probe_dispatch_count() - d0
+
+    skip = ("dispatches", "wall_s")
+    for l, s, k in zip(legacy, seq, lock):
+        for f in dataclasses.fields(type(l)):
+            if f.name in skip:
+                continue
+            assert getattr(l, f.name) == getattr(s, f.name), f.name
+            assert getattr(s, f.name) == getattr(k, f.name), f.name
+    # the acceptance ratio: physical probe dispatches per tick, whole fleet
+    assert legacy_loop >= 2 * lock_loop, (legacy_loop, lock_loop)

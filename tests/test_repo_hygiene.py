@@ -1,0 +1,38 @@
+"""Repository hygiene: no tracked bytecode, ever.
+
+PR 3 accidentally committed ``__pycache__``/``*.pyc`` files; they are
+purged, ``.gitignore`` covers them, and this test (plus the equivalent CI
+step) fails if any tracked path regresses.  Skips gracefully when git (or
+the repo metadata) is unavailable, e.g. in an sdist.
+"""
+
+import os
+import subprocess
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tracked_files():
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=REPO, timeout=60,
+                             capture_output=True, text=True)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    return out.stdout.splitlines()
+
+
+def test_no_tracked_bytecode_or_pycache():
+    bad = [f for f in _tracked_files()
+           if f.endswith(".pyc") or "__pycache__" in f.split("/")]
+    assert not bad, f"tracked bytecode paths: {bad}"
+
+
+def test_gitignore_covers_bytecode():
+    with open(os.path.join(REPO, ".gitignore")) as f:
+        rules = f.read()
+    assert "__pycache__/" in rules
+    assert "*.py[cod]" in rules
