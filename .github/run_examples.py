@@ -1,0 +1,75 @@
+"""Smoke-run every example against the current API (CI step).
+
+Each example runs in a subprocess with a per-example timeout and, where
+the example supports it, reduced-size arguments — the point is API
+coverage (imports, session/plan calls, output), not benchmark fidelity.
+Any non-zero exit, timeout, or missing example fails the step.
+
+    PYTHONPATH=src python .github/run_examples.py            # all
+    PYTHONPATH=src python .github/run_examples.py quickstart # filter
+"""
+
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: example -> (argv, timeout_s).  Heavy drivers get reduced knobs.
+EXAMPLES = {
+    "quickstart.py": ([], 420),
+    "run_matrix.py": ([], 900),
+    "abstraction_api.py": (["skylake_sp", "/tmp/smoke-abstraction.json"],
+                           420),
+    "probe_plans.py": (["skylake_sp"], 420),
+    "probe_cloud_sim.py": ([], 420),
+    "drift_repair.py": (["skylake_sp"], 420),
+    "fleet_sim.py": (["skylake_sp"], 600),
+    "serve_batched.py": ([], 420),
+    "train_100m.py": (["--steps", "4", "--ckpt", "/tmp/smoke-ckpt"], 600),
+    "elastic_restart.py": ([], 600),
+}
+
+
+def main() -> int:
+    filters = sys.argv[1:]
+    examples_dir = os.path.join(REPO, "examples")
+    on_disk = sorted(f for f in os.listdir(examples_dir)
+                     if f.endswith(".py"))
+    unknown = [f for f in on_disk if f not in EXAMPLES]
+    if unknown:
+        print(f"FAIL: examples missing a smoke entry: {unknown} "
+              "(add them to .github/run_examples.py)")
+        return 1
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    failures = []
+    for name, (argv, timeout) in EXAMPLES.items():
+        if filters and not any(f in name for f in filters):
+            continue
+        path = os.path.join(examples_dir, name)
+        t0 = time.time()
+        print(f"--- {name} {' '.join(argv)}", flush=True)
+        try:
+            proc = subprocess.run(
+                [sys.executable, path, *argv], env=env, cwd=REPO,
+                timeout=timeout, capture_output=True, text=True)
+            ok = proc.returncode == 0
+            tail = (proc.stdout + proc.stderr).strip().splitlines()[-8:]
+        except subprocess.TimeoutExpired:
+            ok, tail = False, [f"TIMEOUT after {timeout}s"]
+        wall = time.time() - t0
+        print(f"    {'ok' if ok else 'FAIL'} ({wall:.0f}s)", flush=True)
+        if not ok:
+            failures.append(name)
+            print("    " + "\n    ".join(tail), flush=True)
+    if failures:
+        print(f"\nFAILED examples: {failures}")
+        return 1
+    print("\nall examples OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

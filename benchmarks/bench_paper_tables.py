@@ -14,13 +14,18 @@ fleet    — Fig 10 / Tables 7-8 analogs, closed-loop: policy x platform x
 plans    — ProbePlan executor vs the pre-plan batched baseline: physical
            probe dispatches per fleet tick (legacy / plans / lockstep),
            headline-parity check, bench-plans-dispatch.csv artifact
+drift    — host-event drift scenarios: incremental `session.repair()` vs
+           a from-scratch re-attach after a <=25% remap (dispatch ratio,
+           the PR's >=5x acceptance metric) + closed-loop fleet recovery
+           after each platform's event schedule; writes
+           bench-drift-recovery.csv
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_vm, emit, timer, write_report_csv
+from benchmarks.common import bench_vm, emit, record, timer, write_report_csv
 from repro.core.cachesim import CacheGeometry, MachineGeometry
 from repro.core.cap import CapAllocator
 from repro.core.cas import MiniSched, SimTask, TierTracker
@@ -327,6 +332,11 @@ def bench_fleet():
     emit("fleet.matrix_wall", t["us"],
          f"runs={len(reports)};seeds={len(seeds)};"
          f"probe_dispatches={matrix_dispatches}")
+    plats = "+".join(sorted({r.platform for r in reports}))
+    record(f"fleet_matrix_probe_dispatches.{plats}.{len(reports)}runs",
+           matrix_dispatches, "`--only fleet` whole matrix")
+    record(f"fleet_matrix_wall_s.{plats}.{len(reports)}runs",
+           round(t["us"] / 1e6, 1), "`--only fleet` whole matrix")
 
 
 def bench_plans():
@@ -384,6 +394,9 @@ def bench_plans():
          f"legacy_per_tick={legacy_pt:.1f};lockstep_per_tick={lock_pt:.1f};"
          f"reduction={legacy_pt / max(lock_pt, 1e-9):.1f}x;"
          f"headline_parity={parity}")
+    record(f"fleet_loop_probe_dispatches_per_tick.{plat}.{guests}guests",
+           lock_pt, f"legacy {legacy_pt:.1f}/tick; "
+           f"headline_parity={parity}; `--only plans`")
     path = "bench-plans-dispatch.csv"
     with open(path, "w") as f:
         f.write("mode,guests,intervals,loop_dispatches,"
@@ -391,6 +404,98 @@ def bench_plans():
         for mode, g, n, loop, pt, wall in rows:
             f.write(f"{mode},{g},{n},{loop},{pt:.2f},{wall:.3f}\n")
     emit("plans.report_csv", 0.0, f"path={path};rows={len(rows)}")
+
+
+def bench_drift():
+    """Drift acceptance bench, two halves:
+
+    * repair-vs-rebuild: attach a session, probe everything, apply a 25%
+      partial remap mid-wait, then compare `session.repair()`'s probe
+      dispatches with a from-scratch re-attach on the same drifted VM
+      (acceptance: repair >= 5x cheaper), hypercall-validating that the
+      repaired abstraction is as good as the fresh one;
+    * fleet recovery: the closed loop with each platform's DriftSpec
+      schedule — CAS must keep steering through migration/CAT/remap
+      events, with repair cost and worst-case measured-recovery interval
+      per platform.
+
+    Writes bench-drift-recovery.csv next to the fleet artifacts.
+    """
+    import os
+
+    from repro.core import CacheXSession, ProbeConfig, get_platform
+    from repro.core.fleet import FleetSim
+    from repro.core.host_model import HostEvent
+
+    platforms = [p for p in os.environ.get(
+        "DRIFT_PLATFORMS", "skylake_sp,milan_ccx").split(",") if p]
+    rows = []
+    for name in platforms:
+        plat = get_platform(name)
+        host, vm = plat.make_host_vm(seed=77)
+        session = CacheXSession.attach(
+            vm, plat, ProbeConfig.for_platform(plat, seed=77), eager=True)
+        pages = vm.alloc_pages(16 * max(1, plat.n_l2_colors))
+        session.colors().colors_of(pages)
+        session.refresh()
+        attach_d = vm.stat_passes
+        host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5,
+                                      kind="remap", fraction=0.25))
+        vm.wait_ms(1.0)
+        d0 = vm.stat_passes
+        with timer() as t_rep:
+            rep = session.repair()
+        repair_d = vm.stat_passes - d0
+        truth = session.validate()
+        d1 = vm.stat_passes
+        with timer() as t_reb:
+            fresh = CacheXSession.attach(
+                vm, plat, ProbeConfig.for_platform(plat, seed=78),
+                eager=True)
+            fresh.colors().colors_of(pages)
+            fresh.refresh()
+        rebuild_d = vm.stat_passes - d1
+        ratio = rebuild_d / max(1, repair_d)
+        ok = (not truth["stale"]) and truth["ways_match"]
+        emit(f"drift.repair_vs_rebuild_{name}", t_rep["us"],
+             f"repair_dispatches={repair_d};rebuild_dispatches={rebuild_d};"
+             f"ratio={ratio:.1f}x;sets_repaired="
+             f"{rep.llc_repaired + rep.vscan_repaired};"
+             f"pages_recolored={rep.pages_recolored};"
+             f"validated={ok};target=5x")
+        record(f"drift_repair_dispatches.{name}.remap25", repair_d,
+               f"vs rebuild {rebuild_d} ({ratio:.1f}x; attach was "
+               f"{attach_d}); `--only drift`")
+        rows.append((name, "remap25", "repair", repair_d, rebuild_d,
+                     f"{ratio:.2f}", "", ""))
+
+    for name in platforms:
+        sim = FleetSim(name, policy="cas", cap="on", seed=0, drift=True)
+        kinds = "+".join(s.kind for s in sim.drift_specs) or "none"
+        with timer() as t:
+            r = sim.run()
+        emit(f"drift.fleet_{name}", t["us"],
+             f"events={r.drift_events}({kinds});repairs={r.repairs};"
+             f"repair_dispatches={r.repair_dispatches};"
+             f"recovery_max_intervals={r.recovery_max_intervals};"
+             f"quiet_res={r.quiet_residency:.2f};thr={r.throughput:.1f}")
+        record(f"drift_fleet_recovery_intervals.{name}",
+               r.recovery_max_intervals,
+               f"cas; events {kinds}; repairs={r.repairs} cost "
+               f"{r.repair_dispatches} dispatches; quiet_res="
+               f"{r.quiet_residency:.2f}")
+        rows.append((name, kinds, "fleet", r.repair_dispatches, "", "",
+                     r.recovery_max_intervals,
+                     f"{r.quiet_residency:.2f}"))
+
+    path = "bench-drift-recovery.csv"
+    with open(path, "w") as f:
+        f.write("platform,events,mode,repair_dispatches,rebuild_dispatches,"
+                "repair_vs_rebuild_ratio,recovery_max_intervals,"
+                "quiet_residency\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    emit("drift.report_csv", 0.0, f"path={path};rows={len(rows)}")
 
 
 def run_all():
@@ -406,3 +511,4 @@ def run_all():
     bench_scenario_matrix()
     bench_fleet()
     bench_plans()
+    bench_drift()

@@ -16,6 +16,19 @@ from repro.core.host_model import GuestVM, SimHost
 
 ROWS = []
 
+#: Headline metrics recorded by bench sections via :func:`record` — the
+#: machine-readable bench trajectory.  `benchmarks.run` flushes them to
+#: ``benchmarks/BENCH_<pr>.json`` and appends before/after rows to
+#: ``benchmarks/BENCH.csv`` (the "before" of each metric is its last
+#: recorded "after") so the trajectory grows without hand-editing.
+TRAJECTORY = []
+
+
+def record(metric: str, value, notes: str = "") -> None:
+    """Record one headline metric for the bench-trajectory artifacts."""
+    TRAJECTORY.append({"metric": str(metric), "value": value,
+                       "notes": str(notes)})
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"

@@ -4,19 +4,67 @@
     PYTHONPATH=src python -m benchmarks.run --only fig10,roofline
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+Trajectory artifacts: when ``$BENCH_PR`` is set (e.g. ``BENCH_PR=5``),
+headline metrics each section `record()`s are flushed to
+``benchmarks/BENCH_<pr>.json`` and appended to ``benchmarks/BENCH.csv``
+as machine-written before/after rows — each metric's "before" is its most
+recent "after" already in the CSV, so running the bench grows the
+cross-PR trajectory without hand-editing.  Unset (the default for CI
+smoke and ad-hoc runs) the tracked files stay untouched;
+``--no-trajectory`` forces that even with ``$BENCH_PR`` set.
 """
 
 from __future__ import annotations
 
 import argparse
+import csv as _csv
+import io
+import json
+import os
 import sys
 import time
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def flush_trajectory(pr: str, sections_run, wall_s: float) -> None:
+    """Write BENCH_<pr>.json and append before/after rows to BENCH.csv."""
+    from benchmarks.common import TRAJECTORY
+    payload = {"pr": pr, "sections": list(sections_run),
+               "wall_s": round(wall_s, 1), "metrics": TRAJECTORY}
+    json_path = os.path.join(BENCH_DIR, f"BENCH_{pr}.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# trajectory_json,{json_path},{len(TRAJECTORY)}", flush=True)
+    if not TRAJECTORY:
+        return
+    csv_path = os.path.join(BENCH_DIR, "BENCH.csv")
+    last = {}
+    if os.path.exists(csv_path):
+        with open(csv_path) as f:
+            for row in _csv.DictReader(f):
+                if row.get("metric"):
+                    last[row["metric"]] = row.get("after", "")
+    with open(csv_path, "a") as f:
+        w = _csv.writer(f, lineterminator="\n")
+        for m in TRAJECTORY:
+            buf = io.StringIO()
+            _csv.writer(buf, lineterminator="").writerow(
+                [pr, m["metric"], last.get(m["metric"], ""),
+                 m["value"], m["notes"]])
+            f.write(buf.getvalue() + "\n")
+    print(f"# trajectory_csv,{csv_path},appended={len(TRAJECTORY)}",
+          flush=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated name filters (substring match)")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="skip writing BENCH_<pr>.json / BENCH.csv rows")
     args = ap.parse_args()
     filters = [f for f in args.only.split(",") if f]
 
@@ -35,6 +83,7 @@ def main() -> None:
         ("matrix", bench_paper_tables.bench_scenario_matrix),
         ("fleet", bench_paper_tables.bench_fleet),
         ("plans", bench_paper_tables.bench_plans),
+        ("drift", bench_paper_tables.bench_drift),
         ("kernels", bench_system.bench_kernels),
         ("train", bench_system.bench_train_step),
         ("serve", bench_system.bench_serve_step),
@@ -42,15 +91,21 @@ def main() -> None:
     ]
     print("name,us_per_call,derived")
     t0 = time.time()
+    ran = []
     for name, fn in sections:
         if filters and not any(f in name for f in filters):
             continue
+        ran.append(name)
         try:
             fn()
         except Exception as e:  # keep the harness going; failures are rows
             print(f"{name}.ERROR,0.0,{type(e).__name__}: {e}",
                   file=sys.stdout, flush=True)
-    print(f"# total_wall_s,{time.time()-t0:.1f},", flush=True)
+    wall = time.time() - t0
+    pr = os.environ.get("BENCH_PR")
+    if pr and not args.no_trajectory:
+        flush_trajectory(pr, ran, wall)
+    print(f"# total_wall_s,{wall:.1f},", flush=True)
 
 
 if __name__ == "__main__":

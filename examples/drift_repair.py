@@ -1,0 +1,111 @@
+"""Drift epochs demo: the host changes under you; the abstraction heals.
+
+Walks the full drift story on one platform:
+
+  1. attach a `CacheXSession`, probe everything, export the abstraction;
+  2. the host silently misbehaves — a partial page remap and a CAT
+     repartition land as `HostEvent`s *mid-probe* (while the guest
+     waits), bumping the hidden host epoch;
+  3. detection, two ways: `validate()` (hypercall ground truth + epoch
+     staleness, §6.2-style) and the guest's own `check_drift()` /
+     `DriftSignal` subscription (sustained probe anomalies, zero-wait
+     confirmed);
+  4. `session.repair()` fixes only what broke — surviving members +
+     spares rebuild the broken sets in two fused rounds, only
+     invalidated pages recolor — at a fraction of a re-probe's
+     dispatches;
+  5. the pre-drift export now refuses to import (`StaleAbstractionError`)
+     unless `allow_stale=True` + `repair()`.
+
+    PYTHONPATH=src python examples/drift_repair.py [platform]
+"""
+
+import sys
+
+from repro.core import (CacheXSession, HostEvent, ProbeConfig,
+                        StaleAbstractionError, get_platform)
+
+
+def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "skylake_sp"
+    plat = get_platform(name)
+    print(f"== Drift epochs on {name} ({plat.description}) ==\n")
+
+    host, vm = plat.make_host_vm(seed=42)
+    session = CacheXSession.attach(
+        vm, plat, ProbeConfig.for_platform(plat, seed=42), eager=True)
+    pages = vm.alloc_pages(8 * plat.n_l2_colors)
+    session.colors().colors_of(pages)
+    session.refresh()
+    attach_dispatches = vm.stat_passes
+    snapshot = session.export_json()
+    print(f"probed abstraction: {attach_dispatches} dispatches, "
+          f"epoch {session.topology().epoch}, host epoch {host.epoch}")
+
+    signals = []
+    session.subscribe_drift(signals.append)
+
+    # -- the host drifts: events land while the guest waits ------------------
+    host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5, kind="remap",
+                                  fraction=0.25,
+                                  note="compaction rebacks 25%"))
+    vm.wait_ms(1.0)
+    truth = session.validate()
+    print(f"\nafter silent 25% remap: stale={truth['stale']} "
+          f"(host epoch {truth['host_epoch']}), vcol accuracy "
+          f"{truth['vcol_accuracy']:.0%}, VEV verified "
+          f"{truth['vev_verified']}/{truth['vev_built']}")
+    check = session.check_drift()
+    broken = {k: int((~v).sum()) for k, v in check.items()
+              if k != "any_broken"}
+    print(f"guest-side check_drift(): broken per stage = {broken}")
+
+    d0 = vm.stat_passes
+    report = session.repair()
+    print(f"repair(): {vm.stat_passes - d0} dispatches "
+          f"(vs {attach_dispatches} to re-probe, "
+          f"{attach_dispatches / max(1, vm.stat_passes - d0):.0f}x less) — "
+          f"{report.llc_repaired + report.vscan_repaired} sets repaired "
+          f"from survivors, {report.pages_recolored} pages recolored, "
+          f"epoch -> {report.epoch}")
+    truth = session.validate()
+    assert not truth["stale"] and truth["vev_verified"] == truth["vev_built"]
+
+    # -- a CAT repartition: detected by the monitor itself -------------------
+    host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5, kind="cat",
+                                  new_llc_ways=max(
+                                      2, plat.effective_ways // 2),
+                                  note="hypervisor halves the allocation"))
+    vm.wait_ms(1.0)
+    for k in range(6):
+        session.refresh()
+        if signals:
+            break
+    sig = signals[-1]
+    print(f"\nCAT repartition: DriftSignal({sig.kind}) after {k + 1} "
+          f"intervals, {len(sig.set_indices)} monitored sets quarantined")
+    report = session.repair()
+    topo = session.topology()
+    print(f"repair(): re-detected associativity "
+          f"{topo.detected_associativity} (was {plat.effective_ways}), "
+          f"every set re-minimalized, epoch -> {topo.epoch}")
+
+    # -- the pre-drift export is now poison ----------------------------------
+    vm2 = vm.reboot(seed=43)
+    try:
+        CacheXSession.import_json(vm2, snapshot)
+        raise AssertionError("stale import must fail")
+    except StaleAbstractionError as e:
+        print(f"\nimporting the pre-drift export: StaleAbstractionError "
+              f"(as it should be)")
+    salvaged = CacheXSession.import_json(vm2, snapshot, allow_stale=True)
+    rep = salvaged.repair()
+    truth = salvaged.validate()
+    print(f"allow_stale + repair(): {rep.dispatches} dispatches, "
+          f"ways_match={truth['ways_match']}, stale={truth['stale']}")
+    assert not truth["stale"]
+    print("\ndrift OK: detected, signalled, incrementally repaired.")
+
+
+if __name__ == "__main__":
+    main()

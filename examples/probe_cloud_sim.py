@@ -1,65 +1,71 @@
 """Paper §6.4 reproduction: dynamic/asymmetric LLC contention and page-color
 skew in "cloud VMs" (Figs 8 & 9), against simulated providers.
 
-Three simulated hosts play back the paper's observations:
+Three simulated hosts play back the paper's observations through the
+first-class `CacheXSession` API (no hand-wired probe stages):
   * aws-like:    persistent moderate contention,
   * azure-like:  quiescent with a late spike,
-  * google-like: heavy + *asymmetric* across two LLC domains, plus periodic
-                 hypervisor page remapping that skews virtual colors.
+  * google-like: heavy + *asymmetric* across two LLC domains.
+
+The Fig 9 half uses the drift timeline: hypervisor page remapping is a
+scheduled `HostEvent` that lands while the guest waits, `validate()`
+shows the silent staleness (epoch + accuracy), and `session.repair()`
+recolors only the invalidated pages — the paper's "hourly rebuild"
+strategy replaced by incremental repair.
 
     PYTHONPATH=src python examples/probe_cloud_sim.py
 """
 
+import dataclasses
+
 import numpy as np
 
-from repro.core.cachesim import CacheGeometry, MachineGeometry
-from repro.core.color import VCOL, color_accuracy
-from repro.core.host_model import (CotenantWorkload, GuestVM, SimHost,
-                                   polluter_gen, zipf_gen)
-from repro.core.vscan import VScan
+from repro.core import CacheXSession, CachePlatform, ProbeConfig
+from repro.core.cachesim import CacheGeometry
+from repro.core.host_model import CotenantWorkload, HostEvent, polluter_gen
 
-GEOM = dict(l2=CacheGeometry(n_sets=256, n_ways=8),
-            llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=2))
+BASE = CachePlatform(
+    name="cloud_base",
+    description="Skylake-like scaled geometry for the provider sims",
+    l2=CacheGeometry(n_sets=256, n_ways=8),
+    llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=2))
+
+PROVIDERS = {
+    "aws": dict(noise=[("steady", 0, 60.0, 1024)]),
+    "azure": dict(noise=[]),                      # spike arrives mid-run
+    "google": dict(n_domains=2,
+                   noise=[("noisy", 0, 120.0, 2048),
+                          ("mild", 1, 15.0, 512)]),
+}
 
 
-def make_provider(name, seed):
-    if name == "google":
-        geom = MachineGeometry(n_domains=2, cores_per_domain=2, **GEOM)
-        host = SimHost(geom, n_host_pages=1 << 14, seed=seed)
-        vm = GuestVM(host, n_guest_pages=1 << 13, mapping="fragmented",
-                     vcpu_cores=[0, 1, 2, 3])
+def boot(name, seed):
+    spec = PROVIDERS[name]
+    plat = dataclasses.replace(BASE, name=f"cloud_{name}",
+                               n_domains=spec.get("n_domains", 1))
+    host, vm = plat.make_host_vm(seed=seed)
+    for wl_name, domain, rate, pages in spec["noise"]:
         host.add_cotenant(CotenantWorkload(
-            "noisy", 0, 120.0, polluter_gen(region_pages=2048)))
-        host.add_cotenant(CotenantWorkload(
-            "mild", 1, 15.0, polluter_gen(region_pages=512,
-                                          base_page=1 << 19)))
-        return host, vm, {0: [0], 1: [2]}
-    geom = MachineGeometry(n_domains=1, cores_per_domain=2, **GEOM)
-    host = SimHost(geom, n_host_pages=1 << 14, seed=seed)
-    vm = GuestVM(host, n_guest_pages=1 << 13, mapping="fragmented",
-                 vcpu_cores=[0, 1])
-    if name == "aws":
-        host.add_cotenant(CotenantWorkload(
-            "steady", 0, 60.0, polluter_gen(region_pages=1024)))
-    return host, vm, {0: [0]}
+            wl_name, domain, rate,
+            polluter_gen(region_pages=pages,
+                         base_page=(1 << 18) + domain * (1 << 16))))
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=seed))
+    return host, vm, session
 
 
 def probe(name, intervals=12, seed=1):
-    host, vm, domain_vcpus = make_provider(name, seed)
-    vcol = VCOL(vm)
-    cf = vcol.build_color_filters(n_colors=4, ways=8, seed=seed)
-    pool = vm.alloc_pages(8 * 8 * 2 * 3)
-    vs, _ = VScan.build(vm, cf, vcol, pool, ways=8, f=2, offsets=[0],
-                        domain_vcpus=domain_vcpus, seed=seed)
-    series = {d: [] for d in domain_vcpus}
+    host, vm, session = boot(name, seed)
+    session.monitored_sets()
+    series = {d: [] for d in session.domain_vcpus()}
     for i in range(intervals):
         if name == "azure" and i == intervals - 3:
             host.add_cotenant(CotenantWorkload(
                 "spike", 0, 200.0, polluter_gen(region_pages=2048)))
-        vs.monitor_once()
-        for d, r in vs.per_domain_rate().items():
-            series[d].append(r)
-    return series, (vm, vcol, cf)
+        view = session.refresh()
+        for d in series:
+            series[d].append(view.per_domain.get(d, 0.0))
+    return series, (host, vm, session)
 
 
 def spark(xs, scale):
@@ -84,21 +90,29 @@ def main():
           "(Fig 8b behaviour)")
 
     print("\n== Fig 9: page-color skew after hypervisor remapping ==")
-    vm, vcol, cf = results["aws"][1]
+    host, vm, session = results["aws"][1]
     pages = vm.alloc_pages(96)
-    colors = vcol.identify_colors_parallel(cf, pages)
-    print(f"  t=0h   virtual-color accuracy: "
-          f"{color_accuracy(vm, pages, colors, 4):.0%}")
+    session.colors().colors_of(pages)
+    acc0 = session.validate(pages=pages)["vcol_accuracy"]
+    print(f"  t=0h   virtual-color accuracy: {acc0:.0%} "
+          f"(host epoch {host.epoch})")
     for frac, label in ((0.1, "t=1h"), (0.5, "t=12h")):
-        vm._page_table = vm.host.remap_pages(vm._page_table, frac)
-        acc = color_accuracy(vm, pages, colors, 4)
-        print(f"  {label} (remap {frac:.0%}) stale-filter accuracy: "
-              f"{acc:.0%}")
-    vcol2 = VCOL(vm)
-    cf2 = vcol2.build_color_filters(n_colors=4, ways=8, seed=99)
-    colors2 = vcol2.identify_colors_parallel(cf2, pages)
-    print(f"  after rebuild: {color_accuracy(vm, pages, colors2, 4):.0%} "
-          "(hourly rebuild strategy, paper §6.4)")
+        # the remap is a timeline event: it lands while the guest waits
+        host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5,
+                                      kind="remap", fraction=frac))
+        vm.wait_ms(1.0)
+        truth = session.validate(pages=pages)
+        print(f"  {label} (remap {frac:.0%}) stale-abstraction accuracy: "
+              f"{truth['vcol_accuracy']:.0%}  (stale={truth['stale']}, "
+              f"host epoch {truth['host_epoch']})")
+    d0 = vm.stat_passes
+    report = session.repair()
+    acc1 = session.validate(pages=pages)["vcol_accuracy"]
+    print(f"  after repair(): {acc1:.0%} — {report.pages_recolored} pages "
+          f"recolored, {report.filters_repaired + report.filters_rebuilt} "
+          f"filters fixed, {vm.stat_passes - d0} probe dispatches "
+          "(incremental repair, paper §6.4's hourly rebuild made cheap)")
+    assert acc1 == 1.0
 
 
 if __name__ == "__main__":

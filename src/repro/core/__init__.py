@@ -14,18 +14,23 @@ docs/ARCHITECTURE.md):
 
   cachesim     bit-exact L2 + sliced/directory LLC simulator; the batched
                multi-set probe engine (`access_streams_batched`)
-  host_model   SimHost (hypervisor ground truth) / GuestVM (the only surface
+  host_model   SimHost (hypervisor ground truth, the HostEvent drift
+               timeline + epoch counter) / GuestVM (the only surface
                probing code may touch) + canned co-tenant traffic generators
   platforms    CachePlatform registry: the cloud-provisioning scenario matrix
   probeplan    ProbePlan — the declarative probe IR (Commit/Wait/Measure/
-               Vote ops) + the one executor (`execute`, guest-vectorized
-               `execute_many`, `fuse`) every batched probe lowers through
-  eviction     VEV — minimal eviction sets + associativity (§3.1)
-  color        VCOL — virtual page colors + colored free lists (§3.2)
-  vscan        VSCAN — windowed Prime+Probe contention monitoring (§3.3)
+               Vote/Validate ops) + the one executor (`execute`,
+               guest-vectorized `execute_many`, `fuse`) every batched
+               probe lowers through
+  eviction     VEV — minimal eviction sets + associativity (§3.1);
+               spare-carrying sets, validate_sets/repair_sets drift repair
+  color        VCOL — virtual page colors + colored free lists (§3.2);
+               validate_page_colors (recolor only what broke)
+  vscan        VSCAN — windowed Prime+Probe contention monitoring (§3.3);
+               drift suspicion -> DriftSignal + quarantine
   abstraction  CacheXSession — the probed abstraction as a query API
                (topology/colors/contention + plan/execute + subscribe +
-               export/import)
+               epoch-stamped export/import + check_drift/repair)
   cas          CAS — contention tiers + placement policies (§4.1)
   cap          CAP — color-aware page-cache allocation (§4.2)
   runner       run_cachex: one-shot report-builder over a session
@@ -35,6 +40,7 @@ docs/ARCHITECTURE.md):
 
 from repro.core.abstraction import (CacheXSession, ColorsView,
                                     ContentionView, ProbeConfig,
+                                    RepairReport, StaleAbstractionError,
                                     TopologyView, VSCAN_POOL_CAP_PAGES)
 from repro.core.cap import CapAllocator, CapStats
 from repro.core.cas import (TierTracker, allow_pull, policy_place,
@@ -44,14 +50,16 @@ from repro.core.eviction import VEV, EvictionSet
 from repro.core.fleet import (FleetReport, FleetSim, FleetWorkload,
                               fig10_summary, run_fleet, run_fleet_matrix,
                               speedup_summary)
-from repro.core.host_model import (CotenantWorkload, GuestVM, SimHost,
-                                   probe_dispatch_count)
-from repro.core.platforms import (CachePlatform, all_platforms, get_platform,
-                                  list_platforms, register_platform)
+from repro.core.host_model import (CotenantWorkload, GuestVM, HostEvent,
+                                   SimHost, probe_dispatch_count)
+from repro.core.platforms import (CachePlatform, DriftSpec, all_platforms,
+                                  get_platform, list_platforms,
+                                  register_platform)
 from repro.core.probeplan import PlanLowering, PlanResult, ProbePlan
 from repro.core.runner import (CacheXReport, dataclass_csv_header,
                                dataclass_csv_row, run_cachex, run_matrix)
-from repro.core.vscan import MonitoredSet, VScan, theoretical_coverage
+from repro.core.vscan import (DriftSignal, MonitoredSet, VScan,
+                             theoretical_coverage)
 
 __all__ = [
     "CachePlatform",
@@ -63,17 +71,22 @@ __all__ = [
     "ColorsView",
     "ContentionView",
     "CotenantWorkload",
+    "DriftSignal",
+    "DriftSpec",
     "EvictionSet",
     "FleetReport",
     "FleetSim",
     "FleetWorkload",
     "GuestVM",
+    "HostEvent",
     "MonitoredSet",
     "PlanLowering",
     "PlanResult",
     "ProbeConfig",
     "ProbePlan",
+    "RepairReport",
     "SimHost",
+    "StaleAbstractionError",
     "TierTracker",
     "TopologyView",
     "VCOL",

@@ -57,9 +57,24 @@ from repro.core.host_model import GuestVM
 from repro.core.platforms import CachePlatform, get_platform
 from repro.core import probeplan
 from repro.core.probeplan import PlanLowering, PlanResult, ProbePlan
-from repro.core.vscan import DEFAULT_WINDOW_MS, VScan, VScanSnapshot
+from repro.core.vscan import (DEFAULT_WINDOW_MS, DriftSignal, VScan,
+                              VScanSnapshot)
 
-EXPORT_FORMAT = "cachex-abstraction/v1"
+#: Current export format.  v2 adds the drift-epoch stamps
+#: (``host_epoch`` / ``abstraction_epoch`` / ``effective_ways``) and
+#: per-set spares; v1 exports (pre-drift) still import, with no staleness
+#: check possible (docs/MIGRATION.md).
+EXPORT_FORMAT = "cachex-abstraction/v2"
+_ACCEPTED_FORMATS = ("cachex-abstraction/v1", EXPORT_FORMAT)
+
+
+class StaleAbstractionError(ValueError):
+    """Raised by :meth:`CacheXSession.import_` when the snapshot was
+    exported under a different host provisioning epoch than the VM now
+    runs on — live migration, CAT repartitioning, or page remapping
+    happened in between, so the snapshot's colors/sets describe a host
+    that no longer exists.  Import with ``allow_stale=True`` and call
+    :meth:`CacheXSession.repair` to salvage what survived."""
 
 #: Upper bound on the VSCAN probing-pool allocation (guest pages).
 #:
@@ -184,6 +199,10 @@ class TopologyView:
     detected_associativity: Optional[int]
     vev_target_sets: int
     vev_built_sets: int
+    #: abstraction epoch the view was served under (bumps on every
+    #: :meth:`CacheXSession.repair`); holders can tell a pre-drift view
+    #: from a post-repair one without re-querying
+    epoch: int = 0
 
 
 class ColorsView:
@@ -241,9 +260,49 @@ class ContentionView:
     window_ms: float
     measured_at_ms: float
     interval: int
+    #: abstraction epoch the view was measured under (bumps per repair)
+    epoch: int = 0
 
     def age_ms(self, now_ms: float) -> float:
         return now_ms - self.measured_at_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairReport:
+    """What one :meth:`CacheXSession.repair` pass found and fixed.
+
+    ``*_checked`` counts structures validated (filters / cached page
+    colors / LLC topology sets / monitored sets); ``*_repaired`` counts
+    incremental fixes (survivor-pool rebuilds, single-page recolors);
+    ``*_rebuilt`` counts structures that had drifted beyond incremental
+    recovery and were re-probed from a fresh pool (e.g. after a live
+    migration every filter rebuilds).  ``dispatches`` is the total probe
+    dispatches the whole pass cost — the drift benchmarks compare it
+    against a from-scratch re-attach (≥5x cheaper at ≤25% remap).
+    """
+
+    epoch: int                  # abstraction epoch after the pass
+    effective_ways: int         # associativity the session now believes
+    ways_changed: bool          # a CAT repartition was detected
+    filters_checked: int = 0
+    filters_repaired: int = 0
+    filters_rebuilt: int = 0
+    pages_checked: int = 0
+    pages_recolored: int = 0
+    llc_checked: int = 0
+    llc_repaired: int = 0
+    llc_rebuilt: int = 0
+    vscan_checked: int = 0
+    vscan_repaired: int = 0
+    vscan_rebuilt: int = 0
+    dispatches: int = 0
+
+    @property
+    def anything_broken(self) -> bool:
+        return bool(self.filters_repaired or self.filters_rebuilt
+                    or self.pages_recolored or self.llc_repaired
+                    or self.llc_rebuilt or self.vscan_repaired
+                    or self.vscan_rebuilt or self.ways_changed)
 
 
 # ---------------------------------------------------------------------------
@@ -269,10 +328,13 @@ def _default_domain_vcpus(plat: CachePlatform) -> Dict[int, List[int]]:
 def _build_vscan(vm: GuestVM, plat: CachePlatform, vcol: VCOL,
                  cf: ColorFilters, cfg: ProbeConfig,
                  domain_vcpus: Optional[Dict[int, List[int]]] = None,
-                 pool_pages: Optional[np.ndarray] = None
+                 pool_pages: Optional[np.ndarray] = None,
+                 ways: Optional[int] = None
                  ) -> Tuple[VScan, Dict, Dict[int, List[int]]]:
     """VSCAN stage: allocate the probing pool (ProbeConfig-sized) and build
-    the monitored-set list, one constructor vCPU per LLC domain."""
+    the monitored-set list, one constructor vCPU per LLC domain.  ``ways``
+    overrides the platform's effective associativity (drift repair rebuilds
+    at the session's *currently detected* capacity)."""
     if domain_vcpus is None:
         domain_vcpus = _default_domain_vcpus(plat)
     if pool_pages is None:
@@ -280,8 +342,10 @@ def _build_vscan(vm: GuestVM, plat: CachePlatform, vcol: VCOL,
         if n_pool is None:
             n_pool = cfg.derive_vscan_pool(plat)
         pool_pages = vm.alloc_pages(n_pool)
+    info_pool = np.asarray(pool_pages, np.int64)
     vs, info = VScan.build(vm, cf, vcol, pool_pages,
-                           ways=plat.effective_ways, f=cfg.f,
+                           ways=(ways if ways is not None
+                                 else plat.effective_ways), f=cfg.f,
                            offsets=list(cfg.offsets),
                            domain_vcpus=domain_vcpus, votes=cfg.votes,
                            prime_reps=cfg.prime_reps, seed=cfg.seed,
@@ -291,6 +355,7 @@ def _build_vscan(vm: GuestVM, plat: CachePlatform, vcol: VCOL,
                            use_plans=cfg.use_plans, lowering=cfg.lowering)
     if cfg.prune_self_conflicts:
         info["pruned_self_conflicts"] = vs.prune_self_conflicts()
+    info["pool_pages"] = info_pool      # for drift-rebuild page recycling
     return vs, info, domain_vcpus
 
 
@@ -332,7 +397,23 @@ class CacheXSession:
         self._last: Optional[ContentionView] = None
         self._intervals = 0
         self._subs: Dict[int, Callable[[ContentionView], None]] = {}
+        self._drift_subs: Dict[int, Callable[[DriftSignal], None]] = {}
         self._next_sub = 0
+        # -- drift state ----------------------------------------------------
+        # abstraction epoch: bumps on every repair(); stamped on views
+        self.epoch = 0
+        # host provisioning epoch observed when a stage last (re)probed —
+        # VALIDATION METADATA ONLY (export stamps + validate() staleness);
+        # guest-side repair decisions come from probing, never from this
+        self._probed_host_epoch: Optional[int] = None
+        # the LLC associativity the session currently believes (None until
+        # topology probes; updated when repair detects a CAT repartition)
+        self._effective_ways: Optional[int] = None
+        # True once a DriftSignal arrived: the next repair() re-detects
+        # associativity (the signal may have been a capacity change)
+        self._capacity_suspect = False
+        # guest pages backing stage pools (freed if a rebuild replaces them)
+        self._topo_pool_pages = np.empty(0, np.int64)
 
     # -- lifecycle -----------------------------------------------------------
     @classmethod
@@ -350,19 +431,48 @@ class CacheXSession:
         return session
 
     # -- stage ensures -------------------------------------------------------
+    def _note_probed_epoch(self, revalidated: bool = False) -> None:
+        """Record the host epoch a stage was probed under — validation
+        metadata only (export stamps, `validate()` staleness reporting):
+        it never drives a guest-side decision.
+
+        The recorded value is the *earliest* epoch any built stage was
+        probed under: a stage built after a drift event must not mask the
+        staleness of stages built before it (colors probed at epoch 0 stay
+        epoch-0 data even if VSCAN builds at epoch 1).  Only a full
+        :meth:`repair` pass — which re-validates every stage —
+        advances it unconditionally (``revalidated=True``)."""
+        now = self.vm.hypercall_host_epoch()
+        if revalidated or self._probed_host_epoch is None:
+            self._probed_host_epoch = now
+        else:
+            self._probed_host_epoch = min(self._probed_host_epoch, now)
+
+    def _vev(self) -> VEV:
+        cfg = self.config
+        return VEV(self.vm, votes=cfg.votes, prime_reps=cfg.prime_reps,
+                   use_batch=cfg.use_batch, use_plans=cfg.use_plans,
+                   lowering=cfg.lowering)
+
+    def effective_ways(self) -> int:
+        """The LLC associativity the session currently believes — the
+        platform's provisioning until topology probes; re-detected by
+        :meth:`repair` after a CAT repartition event."""
+        return (self._effective_ways if self._effective_ways is not None
+                else self.platform.effective_ways)
+
     def _ensure_colors(self) -> None:
         if self._cf is None:
             self._vcol, self._cf = _build_colors(self.vm, self.platform,
                                                  self.config)
+            self._note_probed_epoch()
 
     def _ensure_topology(self) -> None:
         if self._topo_ready:
             return
         plat, cfg, vm = self.platform, self.config, self.vm
-        vev = VEV(vm, votes=cfg.votes, prime_reps=cfg.prime_reps,
-                  use_batch=cfg.use_batch, use_plans=cfg.use_plans,
-                  lowering=cfg.lowering)
-        ways = plat.effective_ways
+        vev = self._vev()
+        ways = self.effective_ways()
         target = cfg.resolve_vev_targets(plat)
         pool = vev.make_pool(0, ways=ways,
                              n_uncontrollable_rows=plat.n_llc_rows_per_offset,
@@ -378,7 +488,12 @@ class CacheXSession:
             n_slices=plat.llc.n_slices)
         self._detected = vev.probe_associativity(assoc_pool, "llc",
                                                  seed=cfg.seed)
+        self._topo_pool_pages = np.concatenate(
+            [pool, assoc_pool]) >> PAGE_BITS     # drift-rebuild recycling
+        if self._effective_ways is None:
+            self._effective_ways = ways
         self._topo_ready = True
+        self._note_probed_epoch()
 
     def _ensure_vscan(self) -> None:
         if self._vs is not None:
@@ -386,7 +501,8 @@ class CacheXSession:
         self._ensure_colors()
         self._vs, self.vscan_info, self._domain_vcpus = _build_vscan(
             self.vm, self.platform, self._vcol, self._cf, self.config,
-            domain_vcpus=self._domain_vcpus)
+            domain_vcpus=self._domain_vcpus, ways=self.effective_ways())
+        self._note_probed_epoch()
 
     # -- queries -------------------------------------------------------------
     def topology(self) -> TopologyView:
@@ -398,10 +514,11 @@ class CacheXSession:
             n_domains=plat.n_domains,
             cores_per_domain=plat.cores_per_domain,
             domain_vcpus={d: list(v) for d, v in self.domain_vcpus().items()},
-            effective_ways=plat.effective_ways,
+            effective_ways=self.effective_ways(),
             detected_associativity=self._detected,
             vev_target_sets=self.config.resolve_vev_targets(plat),
-            vev_built_sets=len(self._llc_sets))
+            vev_built_sets=len(self._llc_sets),
+            epoch=self.epoch)
 
     def domain_vcpus(self) -> Dict[int, List[int]]:
         if self._domain_vcpus is None:
@@ -491,11 +608,25 @@ class CacheXSession:
             mean_rate=float(snap.rate.mean()) if len(snap.rate) else 0.0,
             window_ms=snap.window_ms,
             measured_at_ms=snap.time_ms,
-            interval=self._intervals)
+            interval=self._intervals,
+            epoch=self.epoch)
         self._last = view
         for fn in list(self._subs.values()):
             fn(view)
+        # sustained probe anomalies surface as an explicit DriftSignal:
+        # when suspicion streaks mature, a zero-wait confirmation (2
+        # dispatches, contention-proof) either quarantines the broken sets
+        # and notifies drift subscribers, or resets the streaks
+        if len(self._vs.drift_suspects()):
+            sig = self._vs.confirm_drift()
+            if sig is not None:
+                self._emit_drift(sig)
         return view
+
+    def _emit_drift(self, sig: DriftSignal) -> None:
+        self._capacity_suspect = True
+        for fn in list(self._drift_subs.values()):
+            fn(sig)
 
     def subscribe(self, fn: Callable[[ContentionView], None],
                   replay: bool = False) -> int:
@@ -510,16 +641,299 @@ class CacheXSession:
             fn(self._last)
         return sid
 
+    def subscribe_drift(self, fn: Callable[[DriftSignal], None]) -> int:
+        """Register a drift consumer; called with every confirmed
+        :class:`~repro.core.vscan.DriftSignal` (monitoring anomalies) —
+        the hook a long-running deployment uses to trigger
+        :meth:`repair` instead of polling :meth:`check_drift`.  Shares the
+        token namespace with :meth:`subscribe`/:meth:`unsubscribe`."""
+        sid = self._next_sub
+        self._next_sub += 1
+        self._drift_subs[sid] = fn
+        return sid
+
     def unsubscribe(self, token: int) -> None:
         self._subs.pop(token, None)
+        self._drift_subs.pop(token, None)
+
+    # -- drift: guest-side check & incremental repair ------------------------
+    def check_drift(self) -> Dict:
+        """Guest-side validity check of every stage probed so far — *no
+        hypercalls, no repair*: one fused Validate dispatch per stage
+        (`VEV.validate_sets` self-eviction lanes).  Returns per-stage
+        bool arrays (``filters_valid`` / ``llc_valid`` / ``vscan_valid``,
+        True = intact) plus ``any_broken``.  This is the polling
+        counterpart of :meth:`subscribe_drift`; :meth:`repair` re-checks
+        and fixes in one pass."""
+        out: Dict = {"any_broken": False}
+        vev = self._vev()
+        if self._cf is not None:
+            fv = vev.validate_sets(self._cf.filters, "l2")
+            out["filters_valid"] = fv
+            out["any_broken"] |= bool((~fv).any())
+        if self._topo_ready:
+            lv = vev.validate_sets(self._llc_sets, "llc")
+            out["llc_valid"] = lv
+            out["any_broken"] |= bool((~lv).any())
+        if self._vs is not None:
+            mon = self._vs.monitored
+            mv = vev.validate_sets([m.es for m in mon], "llc",
+                                   vcpus=[m.vcpu for m in mon])
+            mv &= ~self._vs.flagged        # quarantined = broken until fixed
+            out["vscan_valid"] = mv
+            out["any_broken"] |= bool((~mv).any())
+        return out
+
+    def repair(self) -> RepairReport:
+        """Incrementally repair the probed abstraction after host drift.
+
+        Validates every built stage guest-side and fixes only what broke:
+        color filters and eviction sets rebuild from their surviving
+        members + spares (two fused rounds for any number of broken sets,
+        `VEV.repair_sets`); cached page colors are revalidated in one
+        fused round and only the invalidated pages are re-identified;
+        monitored sets are swapped back live (quarantine flags cleared,
+        their EWMA restarted).  A structure drifted beyond incremental
+        recovery (e.g. after live migration) falls back to a fresh-pool
+        rebuild of its stage, recycling the old pool's guest pages.  If a
+        :class:`~repro.core.vscan.DriftSignal` arrived since the last
+        repair, the LLC associativity is re-detected first — a CAT
+        repartition changes the target size every set must shrink/grow to.
+
+        Bumps the abstraction ``epoch`` (stamped on all views) when
+        anything changed.  At a ≤25% partial remap the whole pass costs
+        ≥5x fewer probe dispatches than re-attaching from scratch
+        (asserted in tests/test_drift.py, recorded by
+        ``benchmarks --only drift``)."""
+        vm, plat, cfg = self.vm, self.platform, self.config
+        d0 = vm.stat_passes
+        vev = self._vev()
+        counts = dict(filters_checked=0, filters_repaired=0,
+                      filters_rebuilt=0, pages_checked=0, pages_recolored=0,
+                      llc_checked=0, llc_repaired=0, llc_rebuilt=0,
+                      vscan_checked=0, vscan_repaired=0, vscan_rebuilt=0)
+
+        # -- guest-side validation of every built LLC-level stage ------------
+        lvalid = (vev.validate_sets(self._llc_sets, "llc")
+                  if self._topo_ready else None)
+        mon = self._vs.monitored if self._vs is not None else []
+        mon_vcpus = [m.vcpu for m in mon]
+        mvalid = None
+        if self._vs is not None:
+            mvalid = vev.validate_sets([m.es for m in mon], "llc",
+                                       vcpus=mon_vcpus)
+            mvalid &= ~self._vs.flagged    # quarantined = broken until fixed
+
+        # -- capacity re-detection --------------------------------------------
+        # Triggered by a DriftSignal (a CAT *shrink* self-conflicts), or by
+        # every LLC set reading broken at once — the signature of a CAT
+        # *expansion*, where grown sets stop evicting without any
+        # self-conflict to signal.  The probe pool is a broken set's
+        # members + spares: still congruent after a pure repartition, so
+        # `probe_associativity` reads the new allocation; after a
+        # migration the pool is random and detection abstains (None).
+        ways_changed = False
+        llc_valids = [x for x in (lvalid, mvalid) if x is not None and len(x)]
+        all_llc_broken = bool(llc_valids) and not any(
+            bool(x.any()) for x in llc_valids)
+        if self._capacity_suspect or all_llc_broken:
+            probe_sets = (list(self._llc_sets) or [m.es for m in mon])
+            if probe_sets:
+                es = max(probe_sets, key=lambda e: len(e.spares))
+                pool = np.concatenate([np.asarray(es.gvas, np.int64),
+                                       np.asarray(es.spares, np.int64)])
+                det = vev.probe_associativity(pool, "llc", seed=cfg.seed)
+                if det and det != self.effective_ways():
+                    self._effective_ways = int(det)
+                    ways_changed = True
+        ways = self.effective_ways()
+
+        # -- colors: filters, then only the invalidated pages ---------------
+        if self._cf is not None:
+            filters = self._cf.filters
+            counts["filters_checked"] = len(filters)
+            fvalid = vev.validate_sets(filters, "l2")
+            if (~fvalid).any():
+                new_sets, repaired, failed = self._repair_pass(
+                    vev, filters, fvalid, "l2", plat.l2.n_ways, cfg.seed)
+                if not failed and not self._filters_distinct(vev, new_sets):
+                    # after heavy drift a filter can legitimately
+                    # reassemble on *another* filter's color (any 8
+                    # same-color lines are a valid L2 set) — a duplicated
+                    # color wrecks parallel identification, so the
+                    # namespace must rebuild
+                    failed = list(range(len(new_sets)))
+                if failed:
+                    # beyond incremental recovery: rebuild the VCOL stage
+                    # from a fresh pool (every virtual color re-learns its
+                    # cell, so every cached page color is void)
+                    counts["filters_rebuilt"] = len(filters)
+                    vm.free_pages(np.unique(self._vcol.pool_pages))
+                    self._vcol, self._cf = _build_colors(vm, plat, cfg)
+                else:
+                    counts["filters_repaired"] = len(repaired)
+                    self._cf.filters[:] = new_sets
+            pages = sorted(self._page_colors)
+            counts["pages_checked"] = len(pages)
+            if pages:
+                if counts["filters_rebuilt"]:
+                    page_ok = np.zeros(len(pages), bool)
+                else:
+                    page_ok = self._vcol.validate_page_colors(
+                        self._cf, pages,
+                        [self._page_colors[p] for p in pages])
+                bad = [p for p, ok in zip(pages, page_ok) if not ok]
+                if bad:
+                    got = self._vcol.identify_colors_parallel(
+                        self._cf, np.asarray(bad, np.int64))
+                    # only pages whose color actually moved count as
+                    # recolored (a page that re-identifies to its old
+                    # color — or stays uncolorable — is not a change and
+                    # must not bump the abstraction epoch forever)
+                    moved = 0
+                    for p, c in zip(bad, got):
+                        if self._page_colors[int(p)] != int(c):
+                            self._page_colors[int(p)] = int(c)
+                            moved += 1
+                    counts["pages_recolored"] = moved
+                    if moved:
+                        self._refresh_free_lists()
+
+        # -- topology: LLC eviction sets + detected associativity ------------
+        if self._topo_ready:
+            counts["llc_checked"] = len(self._llc_sets)
+            if ways_changed:
+                lvalid[:] = False     # every set re-minimalizes at new ways
+            if (~lvalid).any():
+                new_sets, repaired, failed = self._repair_pass(
+                    vev, self._llc_sets, lvalid, "llc", ways, cfg.seed)
+                if failed:
+                    counts["llc_rebuilt"] = len(self._llc_sets)
+                    vm.free_pages(np.unique(self._topo_pool_pages))
+                    self._topo_ready = False
+                    self._llc_sets = []
+                    self._detected = None
+                    self._ensure_topology()
+                else:
+                    counts["llc_repaired"] = len(repaired)
+                    self._llc_sets = new_sets
+                    if ways_changed:
+                        self._detected = ways
+
+        # -- vscan: monitored sets back live ---------------------------------
+        if self._vs is not None:
+            counts["vscan_checked"] = len(mon)
+            if ways_changed:
+                mvalid[:] = False
+            if (~mvalid).any():
+                new_sets, repaired, failed = self._repair_pass(
+                    vev, [m.es for m in mon], mvalid, "llc", ways,
+                    cfg.seed, vcpus=mon_vcpus)
+                if failed:
+                    counts["vscan_rebuilt"] = len(mon)
+                    vm.free_pages(np.unique(
+                        self.vscan_info.get("pool_pages",
+                                            np.empty(0, np.int64))))
+                    self._vs = None
+                    self._ensure_vscan()
+                else:
+                    counts["vscan_repaired"] = len(repaired)
+                    for i in repaired:
+                        self._vs.replace_set(i, new_sets[i])
+
+        self._capacity_suspect = False
+        changed = ways_changed or any(
+            counts[k] for k in counts if "repaired" in k or "rebuilt" in k
+            or k == "pages_recolored")
+        if changed:
+            self.epoch += 1
+        self._note_probed_epoch(revalidated=True)
+        return RepairReport(epoch=self.epoch, effective_ways=ways,
+                            ways_changed=ways_changed,
+                            dispatches=vm.stat_passes - d0, **counts)
+
+    def _filters_distinct(self, vev: VEV, filters: List[EvictionSet]) -> bool:
+        """One fused round checking repaired color filters are pairwise
+        non-congruent (distinct virtual colors): filter j must NOT evict
+        filter i's spare re-addressed at j's offset.  A spare-less filter
+        cannot be checked and reads as non-distinct (conservative)."""
+        tests = []
+        for i, fi in enumerate(filters):
+            if not len(fi.spares):
+                return False
+            page = (int(fi.spares[0]) >> PAGE_BITS) << PAGE_BITS
+            for j, fj in enumerate(filters):
+                if i != j:
+                    tests.append((page | int(fj.offset), fj.gvas))
+        if not tests:
+            return True
+        verdicts = vev._verdict_round(tests, [0] * len(tests), "l2")
+        return not bool(np.asarray(verdicts).any())
+
+    def _repair_pass(self, vev: VEV, sets, valid, level: str, ways: int,
+                     seed: int, vcpus=None):
+        """Two-pass incremental set repair: survivors + spares first; sets
+        still failing retry once with fresh top-up candidates at their
+        offset (a small allocation — the filter round discards off-cell
+        extras, so mixing is safe).  Returns (sets, repaired, failed)."""
+        out = vev.repair_sets(sets, valid, level, ways=ways, seed=seed,
+                              vcpus=vcpus)
+        if not out.failed:
+            return out.sets, out.repaired, []
+        topup = self.vm.alloc_pages(4 * ways)
+        extras = {i: np.asarray(
+            [self.vm.gva(int(p), out.sets[i].offset) for p in topup],
+            np.int64) for i in out.failed}
+        valid2 = np.ones(len(sets), bool)
+        valid2[list(out.failed)] = False
+        out2 = vev.repair_sets(out.sets, valid2, level, ways=ways,
+                               seed=seed + 1, vcpus=vcpus,
+                               extra_pools=extras)
+        # top-up pages that did not join a repaired set (the common case:
+        # most candidates are non-congruent) go back to the allocator —
+        # repeated repairs must not bleed the guest page pool dry
+        used = {int(g) >> PAGE_BITS
+                for i in out.failed
+                for g in np.concatenate([out2.sets[i].gvas,
+                                         out2.sets[i].spares])}
+        self.vm.free_pages([int(p) for p in topup if int(p) not in used])
+        return (out2.sets, sorted(out.repaired + out2.repaired),
+                out2.failed)
+
+    def _refresh_free_lists(self) -> None:
+        """Re-bucket the colored free lists after pages were recolored
+        (allocation state is preserved — only the color keys move)."""
+        if not self._free_lists:
+            return
+        pages = [p for lst in self._free_lists.values() for p in lst]
+        lists: Dict[int, List[int]] = {c: []
+                                       for c in range(self._cf.n_colors)}
+        for p in pages:
+            c = self._page_colors.get(int(p), -1)
+            if c >= 0:
+                lists[int(c)].append(int(p))
+        self._free_lists = lists
+        self._vcol.free_lists = lists
 
     # -- persistence ---------------------------------------------------------
     def export(self) -> Dict:
-        """JSON-serializable snapshot of every stage probed so far."""
+        """JSON-serializable snapshot of every stage probed so far.
+
+        v2 exports are *epoch-stamped*: ``host_epoch`` records the host
+        provisioning epoch the abstraction was probed under (via the
+        validation hypercall — the same §6.2 boundary as
+        :meth:`validate`), so :meth:`import_` can detect a snapshot gone
+        stale against a drifted host; ``abstraction_epoch`` and
+        ``effective_ways`` restore the session's repair lineage."""
         cfg = dataclasses.asdict(self.config)
         cfg["offsets"] = list(cfg["offsets"])
         data: Dict = {"format": EXPORT_FORMAT,
-                      "platform": self.platform.name, "config": cfg}
+                      "platform": self.platform.name, "config": cfg,
+                      "host_epoch": (self._probed_host_epoch
+                                     if self._probed_host_epoch is not None
+                                     else self.vm.hypercall_host_epoch()),
+                      "abstraction_epoch": self.epoch,
+                      "effective_ways": self._effective_ways}
         if self._cf is not None:
             data["colors"] = {
                 "filters": self._cf.state_dict(),
@@ -548,17 +962,38 @@ class CacheXSession:
 
     @classmethod
     def import_(cls, vm: GuestVM, data: Dict,
-                config: Optional[ProbeConfig] = None) -> "CacheXSession":
+                config: Optional[ProbeConfig] = None,
+                allow_stale: bool = False) -> "CacheXSession":
         """Re-attach an exported abstraction to a fresh VM *without
         re-probing* — valid when the VM's GPA→HPA backing matches the one
         probed (e.g. :meth:`GuestVM.reboot`: the hypervisor keeps the
         memory across a guest reboot).  Pages the abstraction references
         are re-reserved in the guest allocator.  Contention state is live
         data and starts empty — call :meth:`refresh` to re-measure with
-        the imported monitored sets."""
-        if data.get("format") != EXPORT_FORMAT:
+        the imported monitored sets.
+
+        Epoch awareness: a v2 snapshot records the host provisioning
+        epoch it was probed under; if the host has drifted since
+        (migration / CAT repartition / remapping), the snapshot is stale
+        and import raises :class:`StaleAbstractionError`.  Pass
+        ``allow_stale=True`` to attach it anyway and call :meth:`repair`
+        to salvage the surviving structures — still far cheaper than
+        re-probing from scratch after a partial remap.  v1 snapshots
+        (pre-epoch) import unchecked."""
+        if data.get("format") not in _ACCEPTED_FORMATS:
             raise ValueError(f"not a {EXPORT_FORMAT} export: "
                              f"{data.get('format')!r}")
+        snap_epoch = data.get("host_epoch")
+        if snap_epoch is not None and not allow_stale:
+            now = vm.hypercall_host_epoch()
+            if now != snap_epoch:
+                raise StaleAbstractionError(
+                    f"snapshot was probed at host epoch {snap_epoch}, but "
+                    f"the host is now at epoch {now}: provisioning drifted "
+                    f"(migration / CAT repartition / page remap) and the "
+                    f"snapshot's colors and sets are no longer "
+                    f"trustworthy.  Import with allow_stale=True and call "
+                    f"repair() to salvage what survived.")
         plat = get_platform(data["platform"])
         if config is None:
             kw = dict(data["config"])
@@ -567,6 +1002,10 @@ class CacheXSession:
                 kw["lowering"] = PlanLowering(**kw["lowering"])
             config = ProbeConfig(**kw)
         session = cls(vm, plat, config)
+        session.epoch = int(data.get("abstraction_epoch", 0))
+        session._probed_host_epoch = snap_epoch
+        if data.get("effective_ways") is not None:
+            session._effective_ways = int(data["effective_ways"])
         reserve: set = set()
         if "colors" in data:
             sec = data["colors"]
@@ -610,8 +1049,10 @@ class CacheXSession:
 
     @classmethod
     def import_json(cls, vm: GuestVM, js: str,
-                    config: Optional[ProbeConfig] = None) -> "CacheXSession":
-        return cls.import_(vm, json.loads(js), config=config)
+                    config: Optional[ProbeConfig] = None,
+                    allow_stale: bool = False) -> "CacheXSession":
+        return cls.import_(vm, json.loads(js), config=config,
+                           allow_stale=allow_stale)
 
     # -- hypercall ground truth (tests / benchmarks / reports ONLY) ----------
     def validate(self, pages: Optional[Sequence[int]] = None) -> Dict:
@@ -621,10 +1062,21 @@ class CacheXSession:
 
         Returns ``vcol_accuracy`` (over ``pages``, default: every cached
         page), ``vev_built``/``vev_verified`` (sets whose lines are all
-        congruent in one (set, slice) at the effective associativity), and
-        ``ways_match`` (detected == guest-effective associativity)."""
+        congruent in one (set, slice) at the effective associativity),
+        ``ways_match`` (detected == guest-effective associativity), and
+        the drift-epoch stamps: ``host_epoch`` (the host's provisioning
+        epoch now), ``probed_epoch`` (the epoch the session last probed or
+        repaired under) and ``stale`` — True when the host drifted since,
+        i.e. the silent-staleness condition a pre-drift session could
+        never see (regression-tested in tests/test_drift.py)."""
         vm, plat = self.vm, self.platform
-        out: Dict = {}
+        host_epoch = vm.hypercall_host_epoch()
+        out: Dict = {
+            "host_epoch": host_epoch,
+            "probed_epoch": self._probed_host_epoch,
+            "stale": (self._probed_host_epoch is not None
+                      and self._probed_host_epoch != host_epoch),
+        }
         if self._cf is not None:
             if pages is None:
                 pages = sorted(self._page_colors)
@@ -634,7 +1086,7 @@ class CacheXSession:
                 out["vcol_accuracy"] = color_accuracy(
                     vm, pages, virtual, plat.n_l2_colors)
         if self._topo_ready:
-            ways = plat.effective_ways
+            ways = self.effective_ways()
             verified = [
                 es for es in self._llc_sets
                 if len(es) == ways

@@ -152,6 +152,27 @@ class CapAllocator:
             return True
         return False
 
+    def rebucket(self, page_color: Dict[int, int]) -> int:
+        """Drift-repair hook: re-bucket pages after a recoloring pass
+        changed their virtual colors (`CacheXSession.repair`).  Free pages
+        move to their new color's list and allocated pages' color tags are
+        rewritten (so a later reclaim returns them to the right list);
+        allocation statistics and the committed-hottest state are
+        untouched.  Returns the number of pages whose color changed."""
+        changed = 0
+        new_lists: Dict[int, List[int]] = {c: [] for c in self.free_lists}
+        for c, lst in self.free_lists.items():
+            for p in lst:
+                nc = int(page_color.get(p, c))
+                changed += int(nc != c)
+                new_lists.setdefault(nc, []).append(p)
+        self.free_lists = new_lists
+        for p, c in list(self.page_color.items()):
+            nc = int(page_color.get(p, c))
+            changed += int(nc != c)
+            self.page_color[p] = nc
+        return changed
+
     def on_contention(self, view) -> bool:
         """`CacheXSession.subscribe` hook: consume one published
         contention update (anything with a ``per_color`` rate dict) as a

@@ -36,7 +36,7 @@ from repro.core.cachesim import L2_MISS_THRESHOLD, PAGE_BITS
 from repro.core.eviction import VEV, EvictionSet
 from repro.core.host_model import GuestVM
 from repro.core import probeplan
-from repro.core.probeplan import Measure, ProbePlan
+from repro.core.probeplan import Measure, ProbePlan, Vote
 
 
 def replicate_filter(es: EvictionSet, offset: int) -> np.ndarray:
@@ -76,6 +76,9 @@ class VCOL:
         self.vev = vev or VEV(vm, vcpu=vcpu)
         self.vcpu = vcpu
         self.free_lists: Dict[int, List[int]] = {}
+        # guest pages backing the last build_color_filters pool — a drift
+        # repair that rebuilds the filters frees them back to the allocator
+        self.pool_pages: np.ndarray = np.empty(0, np.int64)
 
     # -- filter construction (paper §3.2 "Constructing Color Filters") --------
     def build_color_filters(self, n_colors: int, ways: int,
@@ -83,15 +86,22 @@ class VCOL:
         pool = self.vev.make_pool(offset=0, ways=ways,
                                   n_uncontrollable_rows=n_colors,
                                   n_slices=1, scale=scale)
+        self.pool_pages = np.asarray(pool, np.int64) >> PAGE_BITS
         sets = self.vev.build_for_offset(0, pool, ways=ways, level="l2",
                                          max_sets=n_colors, seed=seed)
         # Replicate each filter to its own aligned page offset so that all
         # filters can be tested in parallel without interference (§3.2).
+        # Spares shift with their filter (color bits sit above the page
+        # offset, so a shifted spare keeps its verified congruence).
         offsets = np.arange(len(sets), dtype=np.int64) * 64
         filters = []
         for es, off in zip(sets, offsets):
-            filters.append(EvictionSet(gvas=replicate_filter(es, int(off)),
-                                       offset=int(off), level="l2"))
+            shifted = EvictionSet(gvas=replicate_filter(es, int(off)),
+                                  offset=int(off), level="l2")
+            if len(es.spares):
+                spare_pages = (es.spares >> PAGE_BITS) << PAGE_BITS
+                shifted.spares = spare_pages | int(off)
+            filters.append(shifted)
         return ColorFilters(filters=filters, offsets=offsets)
 
     # -- color identification ---------------------------------------------------
@@ -173,6 +183,53 @@ class VCOL:
             for i in np.nonzero(bad)[0]:
                 out[s + i] = self.identify_color_sequential(cf, int(chunk[i]))
         return out
+
+    # -- drift revalidation (recolor only what broke) ---------------------------
+    def validate_page_colors(self, cf: ColorFilters, pages: Sequence[int],
+                             colors: Sequence[int]) -> np.ndarray:
+        """Check previously identified virtual colors in ONE fused round.
+
+        Per page, one Prime+Probe lane against *its recorded color's
+        filter only*: ``[page line @ filter offset, filter lines, page
+        line]`` — the line is evicted iff the page still shares that
+        filter's L2 set, i.e. its GPA→HPA backing did not drift.  Returns
+        one bool per page (True = color still valid).  This is what makes
+        drift recovery cheap on the VCOL axis: a full re-identification
+        tests every page against *every* filter, while revalidation is one
+        lane per page, and only the pages that fail are re-identified
+        (`CacheXSession.repair`).  Pages recorded as uncolorable (-1) are
+        reported invalid and go through full re-identification.
+        """
+        pages = np.asarray(pages, np.int64)
+        colors = np.asarray(colors, np.int64)
+        ok = np.zeros(len(pages), bool)
+        idx = [i for i in range(len(pages)) if 0 <= colors[i] < cf.n_colors]
+        if not idx:
+            return ok
+        tests = []
+        for i in idx:
+            es = cf.filters[int(colors[i])]
+            tests.append((self.vm.gva(int(pages[i]), es.offset), es.gvas))
+        if self.vev.use_batch:
+            from repro.core.eviction import _probe_lanes
+            lanes = _probe_lanes(tests, self.vev.prime_reps)
+            if self.vev.use_plans:
+                plan = ProbePlan(
+                    ops=(Vote(lanes=tuple(lanes),
+                              vcpus=(self.vcpu,) * len(lanes),
+                              threshold=L2_MISS_THRESHOLD,
+                              votes=self.vev.votes),),
+                    label="vcol.validate", hints=self.vev.lowering)
+                verdicts = probeplan.execute(self.vm, plan).last
+            else:
+                from repro.core.eviction import _majority_verdicts
+                verdicts = _majority_verdicts(self.vm, lanes, self.vcpu,
+                                              L2_MISS_THRESHOLD,
+                                              self.vev.votes)
+        else:
+            verdicts = [self.vev.evicts(t, c, "l2") for t, c in tests]
+        ok[np.asarray(idx, int)] = np.asarray(verdicts, bool)
+        return ok
 
     # -- colored free lists (consumed by CAP) -----------------------------------
     def build_free_lists(self, cf: ColorFilters, pages: Sequence[int],

@@ -34,9 +34,11 @@ from repro.core.cachesim import (BLOCKS_PER_PAGE, L2_MISS_THRESHOLD,
                                  LLC_MISS_THRESHOLD, LINE_BITS, PAGE_BITS)
 from repro.core.host_model import GuestVM
 from repro.core import probeplan
-from repro.core.probeplan import PlanLowering, ProbePlan, Vote
+from repro.core.probeplan import PlanLowering, ProbePlan, Validate, Vote
 
 C_POOL_SCALE = 3  # paper §3.1: scaling factor C
+_SPARE_HARVEST_ROUNDS = 4  # max extra fused rounds topping up set spares
+SPARE_FACTOR = 2   # spares kept per set = SPARE_FACTOR * ways (repair pool depth)
 
 
 def _probe_lanes(tests, prime_reps: int) -> List[np.ndarray]:
@@ -61,6 +63,27 @@ def vote_plan(tests: Sequence[Tuple[int, Sequence[int]]], prime_reps: int,
         label=label, hints=lowering)
 
 
+def validate_plan(sets: Sequence[EvictionSet], prime_reps: int,
+                  vcpus: Sequence[int], threshold: int, votes: int,
+                  lowering: Optional[PlanLowering] = None,
+                  label: str = "vev.validate") -> ProbePlan:
+    """Compile a drift-validity check of built eviction sets to a one-op
+    :class:`~repro.core.probeplan.Validate` ProbePlan: one
+    ``[spare, members, spare]`` Prime+Probe lane per set that has a
+    verified-congruent spare (``plan.meta["indices"]`` maps lanes back to
+    set positions; spare-less sets are untestable and excluded)."""
+    testable = [i for i, es in enumerate(sets) if len(es.spares)]
+    lanes = tuple(_probe_lanes(
+        [(int(sets[i].spares[0]), sets[i].gvas) for i in testable],
+        prime_reps))
+    return ProbePlan(
+        ops=(Validate(lanes=lanes,
+                      vcpus=tuple(vcpus[i] for i in testable),
+                      threshold=threshold, votes=votes),),
+        label=label, hints=lowering,
+        meta={"indices": testable, "n_sets": len(sets)})
+
+
 def _majority_verdicts(vm: GuestVM, lanes: List[np.ndarray], vcpu, thr: int,
                        votes: int) -> np.ndarray:
     """Fused majority-voted eviction verdicts: one batched dispatch per
@@ -77,26 +100,44 @@ def _majority_verdicts(vm: GuestVM, lanes: List[np.ndarray], vcpu, thr: int,
 
 @dataclasses.dataclass
 class EvictionSet:
-    """A minimal eviction set: `gvas` all map to one cache set."""
+    """A minimal eviction set: `gvas` all map to one cache set.
+
+    ``spares`` are *verified-congruent* non-member lines harvested for free
+    during construction (pool targets a built set was observed to evict,
+    i.e. "covered" targets).  They cost zero extra probing and are what
+    makes drift validation cheap: a minimal set of exactly ``W`` lines
+    cannot test itself (``W-1`` congruent lines never evict), but
+    ``[spare, members, spare]`` is a complete eviction test — see
+    :meth:`VEV.validate_sets`.  Spares double as the enriched candidate
+    pool for incremental :meth:`VEV.repair_sets`.
+    """
 
     gvas: np.ndarray          # guest line addresses (same aligned page offset)
     offset: int               # aligned page offset (bits 11:6 << 6)
     level: str                # "l2" | "llc"
+    spares: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
 
     def __len__(self) -> int:
         return len(self.gvas)
+
+    def add_spare(self, gva: int, cap: int) -> None:
+        if len(self.spares) < cap:
+            self.spares = np.append(self.spares, np.int64(gva))
 
     def state_dict(self) -> Dict:
         """JSON-serializable form (the `CacheXSession` export contract:
         GVAs stay valid across guest reboots because the GPA→HPA backing
         persists)."""
         return {"gvas": [int(g) for g in self.gvas],
-                "offset": int(self.offset), "level": str(self.level)}
+                "offset": int(self.offset), "level": str(self.level),
+                "spares": [int(g) for g in self.spares]}
 
     @classmethod
     def from_state(cls, state: Dict) -> "EvictionSet":
         return cls(gvas=np.asarray(state["gvas"], np.int64),
-                   offset=int(state["offset"]), level=str(state["level"]))
+                   offset=int(state["offset"]), level=str(state["level"]),
+                   spares=np.asarray(state.get("spares", []), np.int64))
 
 
 @dataclasses.dataclass
@@ -286,7 +327,11 @@ class VEV:
             tests = [(target, es.gvas) for es in built]
             tests.append((target, np.array(pool, np.int64)))
             verdicts = yield tests
-            if bool(np.asarray(verdicts[:-1]).any()):   # covered
+            cov = np.flatnonzero(np.asarray(verdicts[:-1]))
+            if len(cov):                                # covered
+                # the covering set evicted this target: a verified-congruent
+                # spare, harvested for free (drift validation/repair fuel)
+                built[int(cov[0])].add_spare(target, cap=SPARE_FACTOR * ways)
                 continue
             if not verdicts[-1]:
                 # pool can no longer evict this target: its set's lines are
@@ -304,6 +349,28 @@ class VEV:
             self.stats.built += 1
             taken = set(int(x) for x in minimal)
             pool = [p for p in pool if int(p) not in taken]
+        # spare harvest: a set built last never saw later "covered" targets,
+        # so it would have no verified-congruent spare and could never be
+        # drift-validated (`validate_sets`).  Top up zero-spare sets from
+        # the leftover pool — every (target, set) pair rides one fused
+        # round, so this adds at most `_SPARE_HARVEST_ROUNDS` dispatches.
+        attempts = 0
+        while (pool and attempts < _SPARE_HARVEST_ROUNDS
+               and any(len(es.spares) < SPARE_FACTOR * ways
+                       for es in built)):
+            poor = [es for es in built
+                    if len(es.spares) < SPARE_FACTOR * ways]
+            targets = [int(pool.pop(0))
+                       for _ in range(min(len(pool), 96))]
+            tests = [(t, es.gvas) for t in targets for es in poor]
+            verdicts = yield tests
+            k = 0
+            for t in targets:
+                for es in poor:
+                    if verdicts[k]:
+                        es.add_spare(t, cap=SPARE_FACTOR * ways)
+                    k += 1
+            attempts += 1
         return built
 
     def build_for_offset(self, offset: int, pool: np.ndarray, ways: int,
@@ -326,6 +393,7 @@ class VEV:
             for es in built:
                 if self.evicts(target, es.gvas, level):
                     covered = True
+                    es.add_spare(target, cap=SPARE_FACTOR * ways)
                     break
             if covered:
                 continue
@@ -344,6 +412,20 @@ class VEV:
             self.stats.built += 1
             taken = set(int(x) for x in minimal)
             pool = [p for p in pool if int(p) not in taken]
+        # spare harvest (sequential twin of the batched phase above)
+        attempts = 0
+        while (pool and attempts < _SPARE_HARVEST_ROUNDS
+               and any(len(es.spares) < SPARE_FACTOR * ways
+                       for es in built)):
+            poor = [es for es in built
+                    if len(es.spares) < SPARE_FACTOR * ways]
+            targets = [int(pool.pop(0))
+                       for _ in range(min(len(pool), 96))]
+            for t in targets:
+                for es in poor:
+                    if self.evicts(t, es.gvas, level):
+                        es.add_spare(t, cap=SPARE_FACTOR * ways)
+            attempts += 1
         return built
 
     # -- associativity probing (paper Table 3) -------------------------------------
@@ -394,6 +476,184 @@ class VEV:
                 else:
                     i += 1
         return len(s) if self.evicts(target, s, level) else None
+
+    # -- drift validation & incremental repair (host-event recovery) -----------
+    def validate_sets(self, sets: Sequence[EvictionSet], level: str,
+                      vcpus: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Cheap guest-side drift check of already-built eviction sets.
+
+        One fused :class:`~repro.core.probeplan.Validate` dispatch per vote
+        tests *every* set: lane ``[spare, members, spare]`` — an intact set
+        still evicts its verified-congruent spare (miss on the re-access),
+        a set whose member pages were silently remapped no longer musters
+        ``ways`` congruent lines and the spare survives (hit).  Returns one
+        bool per set (True = valid).  Conservative by construction: a set
+        whose *spare* drifted, or that has no spare, reads as broken and
+        gets repaired — validation never green-lights a stale set.
+        """
+        if not len(sets):
+            return np.zeros(0, bool)
+        vcpus = ([self.vcpu] * len(sets) if vcpus is None else list(vcpus))
+        ok = np.zeros(len(sets), bool)
+        if self.use_batch:
+            plan = validate_plan(sets, self.prime_reps, vcpus,
+                                 self._threshold(level), self.votes,
+                                 lowering=self.lowering)
+            op = plan.ops[0]
+            if op.lanes:
+                self.stats.tests += len(op.lanes) * self.votes
+                if self.use_plans:
+                    verdicts = probeplan.execute(self.vm, plan).last
+                else:
+                    verdicts = _majority_verdicts(
+                        self.vm, list(op.lanes), list(op.vcpus),
+                        op.threshold, op.votes)
+                ok[np.asarray(plan.meta["indices"], int)] = \
+                    np.asarray(verdicts, bool)
+            return ok
+        for i, es in enumerate(sets):
+            if len(es.spares):
+                ok[i] = self.evicts(int(es.spares[0]), es.gvas, level)
+        return ok
+
+    def _verdict_round(self, tests: Sequence[Tuple[int, Sequence[int]]],
+                       lane_vcpus: Sequence[int], level: str) -> np.ndarray:
+        """One fused round of (target, candidates) eviction verdicts with
+        per-lane vCPUs (the repair primitive; plain :meth:`evicts_many`
+        assumes one constructor vCPU)."""
+        if not tests:
+            return np.zeros(0, bool)
+        self.stats.tests += len(tests) * self.votes
+        if not self.use_batch:
+            return np.array([self.evicts(t, c, level) for t, c in tests])
+        lanes = _probe_lanes(tests, self.prime_reps)
+        if self.use_plans:
+            plan = ProbePlan(
+                ops=(Vote(lanes=tuple(lanes), vcpus=tuple(lane_vcpus),
+                          threshold=self._threshold(level),
+                          votes=self.votes),),
+                label="vev.repair", hints=self.lowering)
+            return np.asarray(probeplan.execute(self.vm, plan).last, bool)
+        return np.asarray(_majority_verdicts(
+            self.vm, lanes, list(lane_vcpus), self._threshold(level),
+            self.votes), bool)
+
+    def repair_sets(self, sets: Sequence[EvictionSet], valid: np.ndarray,
+                    level: str, ways: int, seed: int = 0,
+                    vcpus: Optional[Sequence[int]] = None,
+                    extra_pools: Optional[Dict[int, np.ndarray]] = None
+                    ) -> "RepairOutcome":
+        """Incrementally rebuild only the broken sets (where ``valid`` is
+        False), reusing each set's surviving members + spares as the
+        candidate pool.
+
+        Because members and spares were all verified congruent in ONE
+        (set, slice) cell at build time, repair needs no group-testing
+        scan; two fused rounds fix every broken set at once:
+
+          1. *filter*: for each candidate ``c`` of set ``i``'s pool, one
+             lane ``[c, pool_i \\ {c}, c]`` — ``c`` is evicted iff it is
+             still congruent with the pool's cell and at least ``ways``
+             other pool lines still are (i.e. ``c`` survived the drift);
+          2. *sanity*: the ``ways`` lowest-addressed survivors form the
+             repaired set, the rest become its spares, and one
+             :class:`~repro.core.probeplan.Validate` lane per repaired set
+             re-checks ``[spare, members, spare]`` end to end.
+
+        Sets whose pool kept fewer than ``ways + 1`` congruent lines (or
+        that fail sanity) land in ``RepairOutcome.failed`` — the caller
+        retries with ``extra_pools`` top-up candidates (fresh same-offset
+        lines; an off-cell extra cannot fake a clique, the filter round
+        only keeps lines with ``ways`` congruent peers) or falls back to
+        fresh construction.  Cost: ``2 * votes`` dispatches for any number
+        of broken sets, vs. a full §3.1 pool scan per set for a rebuild —
+        the ≥5x dispatch saving the drift benchmarks record.
+        """
+        valid = np.asarray(valid, bool)
+        vcpus = ([self.vcpu] * len(sets) if vcpus is None else list(vcpus))
+        broken = [i for i in range(len(sets)) if not valid[i]]
+        out = list(sets)
+        if not broken:
+            return RepairOutcome(sets=out, repaired=[], failed=[])
+        # round 1: filter each pool candidate against the rest of its pool
+        tests: List[Tuple[int, np.ndarray]] = []
+        lane_vcpus: List[int] = []
+        spans: List[Tuple[int, np.ndarray, int, int]] = []
+        for i in broken:
+            es = sets[i]
+            parts = [np.asarray(es.gvas, np.int64),
+                     np.asarray(es.spares, np.int64)]
+            if extra_pools and i in extra_pools:
+                parts.append(np.asarray(extra_pools[i], np.int64))
+            pool = np.unique(np.concatenate(parts))
+            start = len(tests)
+            tests.extend((int(c), np.delete(pool, k))
+                         for k, c in enumerate(pool))
+            lane_vcpus.extend([vcpus[i]] * len(pool))
+            spans.append((i, pool, start, len(tests)))
+        verdicts = self._verdict_round(tests, lane_vcpus, level)
+        # reassemble: `ways` survivors -> members, the rest -> spares
+        candidates: List[Tuple[int, EvictionSet]] = []
+        failed: List[int] = []          # pool drifted beyond recovery
+        alias_suspect: List[int] = []   # enough survivors, sanity refuted
+        for i, pool, a, b in spans:
+            survivors = pool[np.asarray(verdicts[a:b], bool)]
+            if len(survivors) < ways + 1:
+                failed.append(i)
+                continue
+            candidates.append((i, EvictionSet(
+                gvas=np.sort(survivors[:ways]),
+                offset=sets[i].offset, level=level,
+                spares=survivors[ways:(1 + SPARE_FACTOR) * ways])))
+        # round 2: end-to-end sanity of every repaired set
+        sane = self.validate_sets([es for _, es in candidates], level,
+                                  vcpus=[vcpus[i] for i, _ in candidates])
+        repaired: List[int] = []
+        for (i, es), ok in zip(candidates, sane):
+            if ok:
+                out[i] = es
+                repaired.append(i)
+            else:
+                alias_suspect.append(i)
+        # round 3 (rare): group-testing fallback on the same pools, ONLY
+        # for sets whose pool had enough survivors yet failed sanity.  The
+        # filter round reads *any* eviction as congruence, so when a pool
+        # aliases another cache level's sets (e.g. an LLC with fewer sets
+        # than the L2: odd L2 colors share one directory set and a big
+        # pool back-invalidates through it), drifted lines can sneak past
+        # it — sanity catches the bad reassembly and the classic prune
+        # (whose verdicts self-correct once the pool shrinks below the
+        # alias threshold) recovers the set, still from survivors only.
+        # Pools that simply drifted beyond recovery (migration) skip the
+        # fallback: grinding group tests on random lines would waste the
+        # dispatch budget the caller needs for its fresh-pool rebuild.
+        if alias_suspect:
+            pools = {i: pool for i, pool, _, _ in spans}
+            jobs = [{"offset": sets[i].offset, "pool": pools[i],
+                     "max_sets": 1, "vcpu": vcpus[i]}
+                    for i in alias_suspect]
+            results, _, _ = build_many(
+                self.vm, jobs, level, ways, votes=self.votes, seed=seed,
+                use_batch=self.use_batch, prime_reps=self.prime_reps,
+                use_plans=self.use_plans, lowering=self.lowering)
+            for i, built in zip(alias_suspect, results):
+                if built:
+                    out[i] = built[0]
+                    repaired.append(i)
+                else:
+                    failed.append(i)
+        return RepairOutcome(sets=out, repaired=sorted(repaired),
+                             failed=sorted(failed))
+
+
+@dataclasses.dataclass
+class RepairOutcome:
+    """Result of one :meth:`VEV.repair_sets` pass."""
+
+    sets: List[EvictionSet]   # input list with broken entries replaced
+    repaired: List[int]       # indices rebuilt from survivors + spares
+    failed: List[int]         # broken beyond incremental recovery: the
+    #                           caller rebuilds these from a fresh pool
 
 
 def _drive(gen, test_fn):

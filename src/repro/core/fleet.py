@@ -66,7 +66,7 @@ from repro.core.cap import CapAllocator
 from repro.core.cas import TierTracker, policy_place
 from repro.core.host_model import (CotenantWorkload, congruent_gen,
                                    polluter_gen)
-from repro.core.platforms import CachePlatform, get_platform
+from repro.core.platforms import CachePlatform, DriftSpec, get_platform
 from repro.core import probeplan
 from repro.core.probeplan import (Commit, Measure, ProbePlan, Segment,
                                   WarmTimer)
@@ -174,6 +174,15 @@ class FleetReport:
                          cycles) post-warmup — CAP's protection shows here.
     ``hot_rate``/``quiet_rate``  mean *measured* VSCAN EWMA rates
                          (%-lines/ms) of the polluted / quiet domain.
+    ``drift_events``/``repairs``/``repair_dispatches``  drift-scenario
+                         accounting: host events that fired, repair passes
+                         that actually fixed something, and the probe
+                         dispatches all repair passes cost.
+    ``recovery_max_intervals``  worst-case intervals from a host event
+                         until the *measured* per-domain ranking again
+                         identified the polluted domain (and, under CAS,
+                         the sensitive task sat in a quiet domain);
+                         -1 = a drift scenario ran but never re-converged.
     """
 
     platform: str
@@ -195,6 +204,10 @@ class FleetReport:
     dispatches: int
     accesses: int
     wall_s: float
+    drift_events: int = 0
+    repairs: int = 0
+    repair_dispatches: int = 0
+    recovery_max_intervals: int = 0
 
     @classmethod
     def csv_header(cls) -> str:
@@ -215,7 +228,9 @@ class FleetSim:
                  use_plans: bool = True,
                  n_intervals: int = 12, warmup: int = 4,
                  ticks_per_interval: int = 32, stream_len: int = 192,
-                 ws_pages: int = 8, thresholds: Sequence[float] = (1.0, 4.0)):
+                 ws_pages: int = 8, thresholds: Sequence[float] = (1.0, 4.0),
+                 drift: Union[bool, Sequence[DriftSpec]] = False,
+                 repair_on_drift: bool = True, revalidate_every: int = 4):
         if policy not in FLEET_POLICIES:
             raise ValueError(f"policy must be one of {FLEET_POLICIES}")
         plat0 = get_platform(platform) if isinstance(platform, str) else platform
@@ -259,6 +274,25 @@ class FleetSim:
                               thresholds=list(thresholds))
         # decide-edge consumers ride session publications, never poll VScan
         self.session.subscribe(self.tt.on_contention)
+
+        # -- drift scenario: scheduled host events + repair-on-signal -------
+        # drift=True uses the platform's default DriftSpec schedule; an
+        # explicit sequence overrides it.  `repair_on_drift` closes the
+        # recovery loop: DriftSignals (and a `revalidate_every`-interval
+        # validation cadence, which catches silent remaps that never
+        # self-conflict) trigger `session.repair()` before the next probe.
+        self.drift_specs: Tuple[DriftSpec, ...] = (
+            tuple(plat0.drift) if drift is True else tuple(drift or ()))
+        self.repair_on_drift = repair_on_drift
+        self.revalidate_every = revalidate_every
+        self._repair_pending = False
+        self._outstanding: List[Tuple[int, object]] = []  # (interval, event)
+        self.stat_drift_events = 0
+        self.stat_repairs = 0
+        self.stat_repair_dispatches = 0
+        self._recoveries: List[int] = []
+        if self.drift_specs and self.repair_on_drift:
+            self.session.subscribe_drift(self._on_drift_signal)
 
         # -- asymmetric contention (Fig 10): pollute domain 0 ---------------
         llc = self.plat.llc
@@ -355,6 +389,72 @@ class FleetSim:
             gen=congruent_gen(target_sets, self.plat.llc.n_sets,
                               base_page=1 << 17)))
 
+    # ------------------------------------------------------------- drift
+    def _on_drift_signal(self, sig) -> None:
+        """`subscribe_drift` hook: queue a repair for the next interval
+        (the signal arrives mid-publish; repairing inline would race the
+        consumers of the same view)."""
+        self._repair_pending = True
+
+    def _schedule_due_events(self, interval: int) -> None:
+        """Materialize this interval's DriftSpecs on the host timeline,
+        half a monitoring window into the upcoming wait — the event lands
+        *mid-probe*, exactly the silent-invalidation the paper warns
+        about."""
+        for spec in self.drift_specs:
+            if spec.at_interval != interval:
+                continue
+            at = self.host.time_ms + 0.5 * self.session._vs.window_ms
+            self.host.schedule_event(spec.event(at))
+            self._outstanding.append((interval, spec))
+            self.stat_drift_events += 1
+
+    def _maybe_repair(self, interval: int) -> None:
+        """Repair-on-signal plus the periodic validation cadence (silent
+        remaps never self-conflict, so signals alone cannot catch them —
+        this is the 'vSCAN monitors continuously' production posture)."""
+        if not (self.drift_specs and self.repair_on_drift):
+            return
+        due = (self._repair_pending
+               or (self.revalidate_every
+                   and interval and interval % self.revalidate_every == 0))
+        if not due:
+            return
+        self._repair_pending = False
+        d0 = self.vm.stat_passes
+        rep = self.session.repair()
+        self.stat_repair_dispatches += self.vm.stat_passes - d0
+        if rep.anything_broken:
+            self.stat_repairs += 1
+            if rep.pages_recolored or rep.filters_rebuilt:
+                # CAP's buckets reflect the old colors: re-sync them
+                self.cap.rebucket(self.session.colors().known_pages())
+
+    def _note_recovery(self, interval: int,
+                       dom_rates: Dict[int, float]) -> None:
+        """Close out outstanding events once the *measured* abstraction
+        steers correctly again: the per-domain ranking re-identifies the
+        polluted domain (all domains measured) and, under CAS, the
+        sensitive task sits in a quiet domain."""
+        if not self._outstanding or not dom_rates:
+            return
+        measured_ok = (len(dom_rates) == self.plat.n_domains
+                       and max(dom_rates, key=dom_rates.get)
+                       == POLLUTED_DOMAIN)
+        placed_ok = (self.policy != "cas"
+                     or self.vcpu_domain[self._sens.vcpu] != POLLUTED_DOMAIN)
+        if measured_ok and placed_ok:
+            self._recoveries.extend(interval - ev_interval
+                                    for ev_interval, _ in self._outstanding)
+            self._outstanding.clear()
+
+    def _recovery_max(self) -> int:
+        if not self.drift_specs:
+            return 0
+        if self._outstanding:
+            return -1            # never re-converged before the run ended
+        return int(max(self._recoveries, default=0))
+
     def _stream_pages(self) -> List[int]:
         if not self.cap_on:
             return list(self.vanilla_order)
@@ -412,6 +512,11 @@ class FleetSim:
         hot_hist: List[float] = []
         quiet_hist: List[float] = []
         for k in range(self.n_intervals):
+            # drift scenario: host events land mid-window; repairs run
+            # before the probe so this interval measures with a (possibly
+            # just-)repaired abstraction
+            self._schedule_due_events(k)
+            self._maybe_repair(k)
             # act (from last interval's decision): route each workload's
             # traffic into its current domain
             for task in tasks:
@@ -475,6 +580,7 @@ class FleetSim:
             prog = np.asarray(prog)
             for t_, p in zip(tasks, prog):
                 t_.done_work += float(p)
+            self._note_recovery(k, dom_rates)
             if k >= self.warmup:
                 scored += 1
                 # any unpolluted domain counts as quiet (>2-domain views)
@@ -504,6 +610,10 @@ class FleetSim:
             dispatches=vm.stat_passes,
             accesses=vm.stat_accesses,
             wall_s=time.perf_counter() - t0,
+            drift_events=self.stat_drift_events,
+            repairs=self.stat_repairs,
+            repair_dispatches=self.stat_repair_dispatches,
+            recovery_max_intervals=self._recovery_max(),
         )
 
 
@@ -567,7 +677,11 @@ def run_fleet_matrix(platforms: Optional[List[str]] = None,
         sims = [FleetSim(n, policy=pol, cap=cap, seed=s, **kw)
                 for pol, cap in combos for s in seeds]
         hints = sims[0].lowering or probeplan.DEFAULT_LOWERING
+        # drift scenarios force sequential runs: per-sim window divergence
+        # can land a cat/migrate event in different intervals, so co-running
+        # guests would stop sharing one machine geometry mid-dispatch
         if (lockstep and len(sims) > 1 and hints.lockstep
+                and not any(s.drift_specs for s in sims)
                 and all(s.use_plans and s.use_batch for s in sims)):
             reports.extend(_run_lockstep(sims))
         else:

@@ -18,6 +18,21 @@ performs dummy timer reads, reproducing the paper's mitigation.
 Simulated time.  `wait_ms()` advances a virtual clock; registered co-tenant
 workloads emit `rate_per_ms` LLC accesses per waited millisecond, which is
 how a Prime+Probe wait window observes contention.
+
+Drift.  Host provisioning is *time-varying*: :class:`HostEvent`s scheduled
+on the host timeline (:meth:`SimHost.schedule_event`) apply while simulated
+time advances — i.e. during a guest's ``wait_ms``, so an event can land in
+the middle of a Prime+Probe window.  Event kinds mirror the ways a cloud
+silently invalidates a probed abstraction (§2.1/§6.4, Fig 9): ``migrate``
+(live migration: full GPA→HPA remap onto a fresh machine, possibly with a
+new hidden slice hash), ``cat`` (runtime CAT repartition: the guest's
+effective LLC associativity changes), ``remap`` (partial page remapping /
+compaction), and ``cotenant`` (co-tenant churn: arrivals, departures,
+re-rates).  Every abstraction-invalidating event bumps ``SimHost.epoch``;
+the guest has *no* architectural visibility into it — only the validation
+hypercall ``hypercall_host_epoch`` (§6.2 boundary) exposes it for
+tests/exports, while guest-side detection must come from probing
+(`VEV.validate_sets`, `VScan` drift signals).
 """
 
 from __future__ import annotations
@@ -78,6 +93,43 @@ class CotenantWorkload:
     enabled: bool = True
 
 
+#: Event kinds that invalidate a probed cache abstraction (bump the epoch).
+EPOCH_EVENT_KINDS = ("migrate", "cat", "remap")
+
+
+@dataclasses.dataclass
+class HostEvent:
+    """One scheduled change of host provisioning (see module docstring).
+
+    ``at_ms``          host-timeline time the event fires (applied while a
+                       guest waits across it — events land mid-probe).
+    ``kind``           ``migrate`` | ``cat`` | ``remap`` | ``cotenant``.
+    ``fraction``       remap: fraction of every guest's pages silently
+                       rebacked (migrate always rebacks everything).
+    ``new_llc_ways``   cat: the guest-effective LLC associativity after the
+                       repartition (machine state re-initializes — a CAT
+                       mask change flushes the guest's old allocation).
+    ``new_slice_seed`` migrate: the destination machine's hidden slice-hash
+                       seed (None keeps the source hash).
+    ``add``/``remove``/``retarget``  cotenant churn: attach a workload,
+                       detach one by name, or retarget one
+                       (``{"name": ..., "domain"/"rate_per_ms"/"enabled"}``).
+    ``note``           free-form annotation (benchmarks / event log).
+    ``applied_at_ms``  set by the host when the event fires.
+    """
+
+    at_ms: float
+    kind: str
+    fraction: float = 1.0
+    new_llc_ways: Optional[int] = None
+    new_slice_seed: Optional[int] = None
+    add: Optional[CotenantWorkload] = None
+    remove: Optional[str] = None
+    retarget: Optional[Dict] = None
+    note: str = ""
+    applied_at_ms: Optional[float] = None
+
+
 class SimHost:
     """The hypervisor + physical machine."""
 
@@ -94,6 +146,110 @@ class SimHost:
         self.time_ms: float = 0.0
         # contiguity: freshly-booted VMs get mostly-contiguous host pages
         self._next_contig = 0
+        # -- drift timeline (see module docstring) --------------------------
+        # epoch counts abstraction-invalidating provisioning changes
+        # (EPOCH_EVENT_KINDS); guests cannot see it architecturally.
+        self.epoch: int = 0
+        self.pending_events: List[HostEvent] = []   # sorted by at_ms
+        self.event_log: List[HostEvent] = []
+        self.guests: List["GuestVM"] = []           # registered at boot
+
+    # -- drift timeline -------------------------------------------------------
+    def _register_guest(self, vm: "GuestVM") -> None:
+        self.guests.append(vm)
+
+    def schedule_event(self, event: HostEvent) -> HostEvent:
+        """Queue a provisioning change on the host timeline.  It applies
+        when simulated time next advances across ``event.at_ms`` (events in
+        the past fire on the very next advance) — i.e. *during* a guest's
+        ``wait_ms``, mid-probe."""
+        self.pending_events.append(event)
+        self.pending_events.sort(key=lambda e: e.at_ms)
+        return event
+
+    def schedule_events(self, events: Sequence[HostEvent]) -> None:
+        for ev in events:
+            self.schedule_event(ev)
+
+    def _guest_page_tables(self) -> List[np.ndarray]:
+        """Unique page tables of registered guests (a rebooted guest shares
+        its predecessor's backing array — remap it once)."""
+        seen: Dict[int, np.ndarray] = {}
+        for vm in self.guests:
+            seen.setdefault(id(vm._page_table), vm._page_table)
+        return list(seen.values())
+
+    def _remap_in_place(self, fraction: float) -> int:
+        """Silently reback ``fraction`` of every guest's pages with new host
+        pages, in place (cached lines of remapped pages are NOT migrated —
+        their old HPAs just stop being accessed, Fig 9)."""
+        remapped = 0
+        for pt in self._guest_page_tables():
+            n = len(pt)
+            k = n if fraction >= 1.0 else int(n * fraction)
+            if k == 0:
+                continue
+            victims = self.rng.choice(n, size=k, replace=False)
+            pt[victims] = self.rng.integers(0, self.n_host_pages, size=k)
+            remapped += k
+        return remapped
+
+    def apply_event(self, event: HostEvent) -> None:
+        """Apply one provisioning change now (normally called by
+        :meth:`advance` at the event's scheduled time)."""
+        if event.kind == "migrate":
+            # live migration: every guest page lands on a new host page of
+            # the destination machine; caches start cold; the destination's
+            # hidden slice hash may differ.
+            self._remap_in_place(1.0)
+            if event.new_slice_seed is not None:
+                self.geom = dataclasses.replace(
+                    self.geom, slice_seed=int(event.new_slice_seed))
+            self.state = cachesim.init_machine(self.geom)
+        elif event.kind == "cat":
+            if event.new_llc_ways is None:
+                raise ValueError("cat event needs new_llc_ways")
+            llc = dataclasses.replace(self.geom.llc,
+                                      n_ways=int(event.new_llc_ways))
+            self.geom = dataclasses.replace(self.geom, llc=llc)
+            # repartitioning rewrites the guest's way mask: its old
+            # occupancy is gone, the machine state re-initializes
+            self.state = cachesim.init_machine(self.geom)
+        elif event.kind == "remap":
+            self._remap_in_place(event.fraction)
+        elif event.kind == "cotenant":
+            if event.add is not None:
+                self.add_cotenant(event.add)
+            if event.remove is not None:
+                self.remove_cotenant(event.remove)
+            if event.retarget is not None:
+                kw = dict(event.retarget)
+                self.retarget_cotenant(kw.pop("name"), **kw)
+        else:
+            raise ValueError(f"unknown host event kind {event.kind!r}")
+        if event.kind in EPOCH_EVENT_KINDS:
+            self.epoch += 1
+        event.applied_at_ms = self.time_ms
+        self.event_log.append(event)
+
+    def advance(self, ms: float) -> None:
+        """Advance the virtual clock by ``ms``: co-tenants emit traffic for
+        every sub-span, and scheduled events fire at their timestamps — so
+        an event can land in the middle of a probe's wait window, with
+        co-tenant traffic correctly split around it."""
+        remaining = float(ms)
+        while self.pending_events and (self.pending_events[0].at_ms
+                                       <= self.time_ms + remaining):
+            ev = self.pending_events.pop(0)
+            span = max(0.0, ev.at_ms - self.time_ms)
+            if span > 0:
+                self.time_ms += span
+                self.run_cotenants(span)
+                remaining -= span
+            self.apply_event(ev)
+        if remaining > 0:
+            self.time_ms += remaining
+            self.run_cotenants(remaining)
 
     # -- memory provisioning ------------------------------------------------
     def provision_pages(self, n: int, mode: str = "contiguous") -> np.ndarray:
@@ -273,6 +429,7 @@ class GuestVM:
         # successive measurement dispatches draw independent replacement
         # decisions, like committed sequential probes would
         self._probe_seq = 0
+        host._register_guest(self)
 
     # -- guest memory management ----------------------------------------------
     def alloc_pages(self, n: int) -> np.ndarray:
@@ -436,14 +593,23 @@ class GuestVM:
 
     # -- time -----------------------------------------------------------------
     def wait_ms(self, ms: float) -> None:
-        """Spin-wait: co-located VMs keep running; our timer goes cold."""
-        self.host.time_ms += ms
-        self.host.run_cotenants(ms)
+        """Spin-wait: co-located VMs keep running, scheduled host events
+        fire at their timestamps (possibly mid-window — the guest cannot
+        tell); our timer goes cold."""
+        self.host.advance(ms)
         self._timer_cooldown()
 
     # -- validation hypercalls (used ONLY by tests/benchmarks) -------------------
     def hypercall_hpa_page(self, gpage: int) -> int:
         return int(self._page_table[gpage])
+
+    def hypercall_host_epoch(self) -> int:
+        """Host provisioning epoch (bumps on migrate/cat/remap events).
+        Validation boundary only: exports stamp it and `validate()` reports
+        staleness against it, but guest-side *decisions* (which sets to
+        repair, when to recolor) must come from probing — see
+        `VEV.validate_sets` / `VScan` drift signals."""
+        return self.host.epoch
 
     def hypercall_l2_color(self, gpage: int) -> int:
         # L2 color = HPA bits 15-12 (paper Fig 1) = low 4 bits of host page no.

@@ -32,8 +32,8 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cachesim import BLOCKS_PER_PAGE, CacheGeometry, MachineGeometry
-from repro.core.host_model import (CotenantWorkload, GuestVM, SimHost,
-                                   polluter_gen, zipf_gen)
+from repro.core.host_model import (CotenantWorkload, GuestVM, HostEvent,
+                                   SimHost, polluter_gen, zipf_gen)
 from repro.core.probeplan import PlanLowering
 
 
@@ -58,6 +58,33 @@ class NoiseSpec:
         else:
             raise ValueError(self.kind)
         return CotenantWorkload(self.name, self.domain, self.rate_per_ms, gen)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """One scheduled provisioning change of a platform's drift scenario.
+
+    Times are in *monitoring intervals* (scenario-relative); a harness
+    converts them to host-timeline milliseconds so the resulting
+    :class:`~repro.core.host_model.HostEvent` lands mid-window
+    (`FleetSim` schedules each event half a window into its interval's
+    wait).  Kinds and parameters mirror ``HostEvent``.
+    """
+
+    at_interval: int
+    kind: str                           # migrate | cat | remap | cotenant
+    fraction: float = 1.0               # remap
+    new_llc_ways: Optional[int] = None  # cat
+    new_slice_seed: Optional[int] = None  # migrate
+    note: str = ""
+
+    def event(self, at_ms: float) -> HostEvent:
+        """Materialize at an absolute host-timeline time."""
+        return HostEvent(at_ms=at_ms, kind=self.kind,
+                         fraction=self.fraction,
+                         new_llc_ways=self.new_llc_ways,
+                         new_slice_seed=self.new_slice_seed,
+                         note=self.note or f"drift@interval{self.at_interval}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +131,14 @@ class CachePlatform:
                          non-lockstep execution on non-LRU replacement
                          where fused trials would not replay the
                          sequential path bit for bit.
+    ``drift``            the platform's default drift scenario: the
+                         :class:`DriftSpec` host events a long-running
+                         deployment on this provisioning would plausibly
+                         see (CAT platforms get repartitions, shared
+                         platforms co-tenant churn, everyone partial
+                         remaps and a live migration).  Consumed by
+                         ``FleetSim(drift=True)`` and
+                         ``benchmarks --only drift``.
     """
 
     name: str
@@ -121,6 +156,7 @@ class CachePlatform:
     votes: int = 1
     prime_reps: int = 1
     lowering: Optional[PlanLowering] = None
+    drift: Tuple[DriftSpec, ...] = ()
 
     def __post_init__(self):
         if self.llc_ways_total == 0:
@@ -236,6 +272,11 @@ SKYLAKE_SP = register_platform(CachePlatform(
     description="Skylake-SP-like: sliced non-inclusive LLC, dedicated",
     l2=SMALL_L2,
     llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=2),
+    drift=(DriftSpec(at_interval=5, kind="remap", fraction=0.2,
+                     note="page compaction rebacks 20% of guest memory"),
+           DriftSpec(at_interval=7, kind="migrate", new_slice_seed=0x51C37,
+                     note="live migration to a host with a different "
+                          "slice hash")),
 ))
 
 # Ice-Lake-SP-like: fewer, bigger slices modelled as a single non-sliced
@@ -245,6 +286,8 @@ ICELAKE_SP = register_platform(CachePlatform(
     description="Ice-Lake-SP-like: non-sliced 12-way LLC, dedicated",
     l2=SMALL_L2,
     llc=CacheGeometry(n_sets=256, n_ways=12, n_slices=1),
+    drift=(DriftSpec(at_interval=5, kind="remap", fraction=0.2),
+           DriftSpec(at_interval=7, kind="migrate")),
 ))
 
 # Milan-like: small CCX LLC domains (several per socket), non-sliced,
@@ -258,6 +301,8 @@ MILAN_CCX = register_platform(CachePlatform(
     # small CCX LLC: monitored-set probe lanes are short (16 lines), so a
     # finer lane bucket wastes far less padded work per Measure dispatch
     lowering=PlanLowering(lane_bucket=64),
+    drift=(DriftSpec(at_interval=5, kind="remap", fraction=0.25,
+                     note="NUMA balancing rebacks a quarter of the guest"),),
 ))
 
 # CAT way-partitioned Skylake: the hypervisor allocates 4 of 8 ways to this
@@ -270,6 +315,9 @@ SKYLAKE_CAT = register_platform(CachePlatform(
     llc=CacheGeometry(n_sets=512, n_ways=4, n_slices=2),
     provisioning="cat",
     llc_ways_total=8,
+    drift=(DriftSpec(at_interval=5, kind="cat", new_llc_ways=6,
+                     note="runtime CAT repartition grants 2 more ways"),
+           DriftSpec(at_interval=7, kind="remap", fraction=0.15)),
 ))
 
 # Slice-partitioned: the guest's pages only ever land in one of the two
@@ -281,6 +329,8 @@ SKYLAKE_SLICEPART = register_platform(CachePlatform(
     llc=CacheGeometry(n_sets=512, n_ways=8, n_slices=1),
     provisioning="slice",
     llc_slices_total=2,
+    drift=(DriftSpec(at_interval=5, kind="remap", fraction=0.2),
+           DriftSpec(at_interval=7, kind="migrate")),
 ))
 
 # Co-tenant-shared Skylake: full geometry, but noisy neighbours keep the
@@ -295,4 +345,6 @@ SKYLAKE_SHARED = register_platform(CachePlatform(
     noise=(NoiseSpec("steady_polluter", domain=0, rate_per_ms=30.0,
                      region_pages=1024),),
     votes=3,
+    drift=(DriftSpec(at_interval=5, kind="remap", fraction=0.25,
+                     note="ballooning under co-tenant memory pressure"),),
 ))

@@ -21,6 +21,12 @@ executor lowers those programs onto the guest probing surface:
   ``Vote``     majority-voted eviction verdicts: ``votes`` Measure rounds,
                the vote index salting each lane's rng fork, reduced to one
                bool per lane (``last-access latency > threshold``)
+  ``Validate`` cheap self-eviction validity check of already-built eviction
+               sets: one ``[spare, members, spare]`` lane per set, lowered
+               exactly like ``Vote`` — verdict True means the set still
+               evicts its congruent spare line, i.e. it survived host drift
+               (page remapping / repartitioning); the drift-repair pipeline
+               (`VEV.validate_sets` → `repair_sets`) is built on it
   ===========  ==============================================================
 
 Why an IR instead of stage-specific driver loops: plans are *data*.  A
@@ -133,7 +139,23 @@ class Vote:
     votes: int = 1
 
 
-ProbeOp = Union[Commit, Wait, WarmTimer, Measure, Vote]
+@dataclasses.dataclass(frozen=True)
+class Validate:
+    """Self-eviction validity check of built eviction sets: one
+    ``[spare, members*, spare]`` Prime+Probe lane per set, ``votes``
+    rounds, majority-reduced.  Output: bool array (B,) — True = the set
+    still evicts its spare (valid), False = drift broke it (or the spare
+    itself drifted; validation errs toward repair).  Structurally a
+    ``Vote`` — the distinct kind makes drift-repair plans self-describing
+    and lets harnesses count validation cost separately."""
+
+    lanes: Tuple[np.ndarray, ...]
+    vcpus: Tuple[int, ...]
+    threshold: int
+    votes: int = 1
+
+
+ProbeOp = Union[Commit, Wait, WarmTimer, Measure, Vote, Validate]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,7 +186,7 @@ class ProbePlan:
                 n += 1 if any(len(s.gvas) for s in op.segments) else 0
             elif isinstance(op, Measure):
                 n += 1 if op.lanes else 0
-            elif isinstance(op, Vote):
+            elif isinstance(op, (Vote, Validate)):
                 n += op.votes if op.lanes else 0
         return n
 
@@ -197,7 +219,8 @@ def _measure(vm: GuestVM, lanes, vcpus, salt, hints: PlanLowering):
                                  batch_bucket=hints.batch_bucket)
 
 
-def _vote(vm: GuestVM, op: Vote, hints: PlanLowering) -> np.ndarray:
+def _vote(vm: GuestVM, op: Union[Vote, Validate],
+          hints: PlanLowering) -> np.ndarray:
     hits = np.zeros(len(op.lanes), np.int64)
     for vote in range(op.votes):
         lats = _measure(vm, op.lanes, op.vcpus, vote, hints)
@@ -228,7 +251,7 @@ def execute(vm: GuestVM, plan: ProbePlan) -> PlanResult:
             out.append(None)
         elif isinstance(op, Measure):
             out.append(_measure(vm, op.lanes, op.vcpus, op.salt, hints))
-        elif isinstance(op, Vote):
+        elif isinstance(op, (Vote, Validate)):
             out.append(_vote(vm, op, hints))
         else:
             raise TypeError(f"unknown probe op {op!r}")
@@ -263,20 +286,21 @@ def fuse(plans: Sequence[ProbePlan]) -> Tuple[ProbePlan, List[List[slice]]]:
                 segs.extend(op.segments)
                 spans[i].append(slice(0, 0))
             ops.append(Commit(segments=tuple(segs)))
-        elif isinstance(op0, (Measure, Vote)):
+        elif isinstance(op0, (Measure, Vote, Validate)):
             lanes: List[np.ndarray] = []
             vcpus: List[int] = []
             for i, op in enumerate(cur):
                 spans[i].append(slice(len(lanes), len(lanes) + len(op.lanes)))
                 lanes.extend(op.lanes)
                 vcpus.extend(op.vcpus)
-            if isinstance(op0, Vote):
+            if isinstance(op0, (Vote, Validate)):
                 if any((op.threshold, op.votes)
                        != (op0.threshold, op0.votes) for op in cur):
                     raise ValueError("cannot fuse Votes with different "
                                      "threshold/votes")
-                ops.append(Vote(lanes=tuple(lanes), vcpus=tuple(vcpus),
-                                threshold=op0.threshold, votes=op0.votes))
+                ops.append(type(op0)(lanes=tuple(lanes), vcpus=tuple(vcpus),
+                                     threshold=op0.threshold,
+                                     votes=op0.votes))
             else:
                 if any(op.salt != op0.salt for op in cur):
                     raise ValueError("cannot fuse Measures with different "
@@ -366,7 +390,7 @@ def execute_many(vms: Sequence[GuestVM],
                 batch_bucket=hints.batch_bucket)
             for o, r in zip(outs, res):
                 o.append(r)
-        elif kind == "Vote":
+        elif kind in ("Vote", "Validate"):
             op0 = ops[0]
             if any((op.threshold, op.votes) != (op0.threshold, op0.votes)
                    for op in ops):

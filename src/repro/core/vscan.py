@@ -48,6 +48,37 @@ from repro.core.probeplan import (Commit, Measure, PlanLowering, PlanResult,
 
 DEFAULT_WINDOW_MS = 7.0
 MIN_WINDOW_MS = 1.0
+#: Zero-wait eviction fraction above which a monitored set is anomalous:
+#: with no window, co-tenants emit no traffic, so ANY eviction of a just-
+#: primed set means the set conflicts with the monitor's own priming —
+#: which only happens when host drift broke congruence assumptions
+#: (remapped members landing in another monitored cell, or a CAT
+#: repartition shrinking the effective associativity so a set over-fills
+#: its own cell).  0.2 catches a 2-way capacity loss (frac 0.25) while
+#: staying far above the exact-zero idle baseline.
+DRIFT_FRAC = 0.2
+#: Consecutive anomalous intervals before a set becomes a drift suspect
+#: (same debounce philosophy as CAS's 3-interval tier hysteresis).
+DRIFT_INTERVALS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSignal:
+    """An explicit drift event distilled from sustained probe anomalies.
+
+    Emitted when monitored sets show eviction fractions ``>= drift_frac``
+    for ``drift_intervals`` consecutive windows AND a zero-wait
+    prime→probe confirms the anomaly is self-inflicted (contention-proof:
+    co-tenants only run while the guest waits).  The flagged sets are
+    quarantined — their garbage measurements stop feeding the EWMA and the
+    per-domain/per-color aggregates — until a repair rebuilds them.
+    """
+
+    kind: str                 # "self_conflict" (capacity change / remap)
+    set_indices: Tuple[int, ...]
+    frac: Tuple[float, ...]   # confirming zero-wait eviction fractions
+    time_ms: float
+    intervals: int            # suspicion streak length that triggered it
 
 
 def theoretical_coverage(n_slices: int, f: int) -> float:
@@ -82,13 +113,25 @@ class VScan:
                  window_ms: float = DEFAULT_WINDOW_MS,
                  ewma_alpha: float = 0.3, n_pairs: int = 1,
                  use_batch: bool = True, use_plans: bool = True,
-                 lowering: Optional[PlanLowering] = None):
+                 lowering: Optional[PlanLowering] = None,
+                 drift_frac: float = DRIFT_FRAC,
+                 drift_intervals: int = DRIFT_INTERVALS):
         self.vm = vm
         self.monitored = monitored
         self.window_ms = window_ms
         self.default_window_ms = window_ms
         self.ewma_alpha = ewma_alpha
         self.n_pairs = max(1, n_pairs)
+        # drift detection (module constants above): sustained anomalies
+        # become suspects; `confirm_drift` turns suspects into a quarantine
+        self.drift_frac = drift_frac
+        self.drift_intervals = drift_intervals
+        self._suspect = np.zeros(len(monitored), np.int64)
+        self.flagged = np.zeros(len(monitored), bool)
+        # intervals to wait before re-running a (failed) drift confirmation
+        # — legitimate heavy contention keeps suspicion streaks alive, and
+        # the cooldown bounds the zero-wait re-checks it can trigger
+        self._confirm_cooldown = 0
         # use_batch probes every monitored set as one lane of a single fused
         # multi-set Prime+Probe dispatch (Table 6); False keeps the seed
         # one-dispatch-per-set probe loop for benchmarking.
@@ -273,13 +316,28 @@ class VScan:
     def _finish_interval(self, frac: np.ndarray,
                          window_ms: float) -> VScanSnapshot:
         rate = 100.0 * frac / max(window_ms, 1e-9)          # % lines / ms
-        self.ewma = (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * rate
+        # quarantined (flagged) sets stop feeding the EWMA: their probes
+        # measure drift damage, not co-tenant contention — freezing them is
+        # exactly the "explicit DriftSignal instead of folding garbage into
+        # the EWMA" contract (they rejoin once a repair clears the flag)
+        live = ~self.flagged
+        self.ewma = np.where(
+            live,
+            (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * rate,
+            self.ewma)
+        # drift suspicion: an anomalously high fraction sustains a streak;
+        # `drift_suspects`/`confirm_drift` turn streaks into a quarantine
+        anomalous = live & (frac >= self.drift_frac)
+        self._suspect = np.where(anomalous, self._suspect + 1, 0)
+        self._suspect[~live] = 0
+        self._confirm_cooldown = max(0, self._confirm_cooldown - 1)
 
-        # window auto-adjustment (§3.3): shrink on full eviction across sets,
-        # reset to default when evictions are absent.
-        if len(frac) and float(np.min(frac)) >= 1.0:
+        # window auto-adjustment (§3.3): shrink on full eviction across
+        # (live) sets, reset to default when evictions are absent.
+        lf = frac[live]
+        if len(lf) and float(np.min(lf)) >= 1.0:
             self.window_ms = max(MIN_WINDOW_MS, self.window_ms - 1.0)
-        elif len(frac) and float(np.max(frac)) == 0.0:
+        elif len(lf) and float(np.max(lf)) == 0.0:
             self.window_ms = self.default_window_ms
 
         snap = VScanSnapshot(eviction_frac=frac, rate=rate,
@@ -318,7 +376,69 @@ class VScan:
         if dropped:
             self.monitored = [m for m, k in zip(self.monitored, keep) if k]
             self.ewma = self.ewma[keep]
+            self._suspect = self._suspect[keep]
+            self.flagged = self.flagged[keep]
         return dropped
+
+    # -- drift detection (suspects → zero-wait confirm → quarantine) -----------
+    def drift_suspects(self) -> np.ndarray:
+        """Indices of live monitored sets whose anomaly streak reached
+        ``drift_intervals`` (candidates for :meth:`confirm_drift`)."""
+        if self._confirm_cooldown > 0:
+            return np.empty(0, np.int64)
+        return np.flatnonzero((self._suspect >= self.drift_intervals)
+                              & ~self.flagged)
+
+    def confirm_drift(self) -> Optional[DriftSignal]:
+        """Zero-wait prime→probe over the monitored sets, the
+        contention-proof arbiter behind the suspicion streaks: with no
+        window, co-tenants emit nothing, so evictions can only be
+        self-inflicted — host drift (remap collisions, CAT capacity loss),
+        not load.  Confirmed sets are flagged (quarantined from the EWMA
+        and aggregates) and an explicit :class:`DriftSignal` is returned;
+        an unconfirmed suspicion resets the streaks and backs off.  Costs
+        2 dispatches; callers gate it on :meth:`drift_suspects`."""
+        suspects = np.flatnonzero((self._suspect >= self.drift_intervals)
+                                  & ~self.flagged)
+        if not len(suspects):
+            return None
+        by_prober = self._by_prober()
+        if self.use_batch and self.use_plans:
+            ops, order = self._interval_ops(by_prober, window_ms=None)
+            plan = ProbePlan(ops=ops, label="vscan.confirm",
+                             hints=self.lowering)
+            frac = self._frac_from_lanes(
+                order, probeplan.execute(self.vm, plan).last)
+        else:
+            self._prime(by_prober)
+            frac = self._probe(by_prober)
+        confirmed = np.flatnonzero((frac >= self.drift_frac)
+                                   & ~self.flagged)
+        self._suspect[:] = 0
+        if not len(confirmed):
+            self._confirm_cooldown = 4 * self.drift_intervals
+            return None
+        self.flagged[confirmed] = True
+        return DriftSignal(kind="self_conflict",
+                           set_indices=tuple(int(i) for i in confirmed),
+                           frac=tuple(float(frac[i]) for i in confirmed),
+                           time_ms=self.vm.host.time_ms,
+                           intervals=self.drift_intervals)
+
+    def flag_sets(self, indices: Sequence[int]) -> None:
+        """Quarantine monitored sets found broken by an external check
+        (e.g. `VEV.validate_sets` during `CacheXSession.repair`)."""
+        for i in indices:
+            self.flagged[int(i)] = True
+
+    def replace_set(self, index: int, es) -> None:
+        """Swap in a repaired eviction set and bring the slot back live:
+        flag cleared, EWMA and suspicion reset (a repaired set re-measures
+        from scratch — its old rate history described different lines)."""
+        self.monitored[index].es = es
+        self.flagged[index] = False
+        self._suspect[index] = 0
+        self.ewma[index] = 0.0
 
     def monitor_once(self) -> VScanSnapshot:
         """Prime -> wait(window) -> probe (reverse order, timed).  One
@@ -337,15 +457,23 @@ class VScan:
         return self._finish_interval(frac, self.window_ms)
 
     # -- aggregation (consumed by CAS / CAP) -------------------------------------
+    # Quarantined (flagged) sets are excluded: their EWMA is frozen drift
+    # garbage.  A (domain, color) whose every set is quarantined simply
+    # drops out of the dict until repaired — consumers already tolerate
+    # missing keys (CAP orders unmeasured colors last).
     def per_domain_rate(self) -> Dict[int, float]:
         out: Dict[int, List[float]] = {}
         for i, m in enumerate(self.monitored):
+            if self.flagged[i]:
+                continue
             out.setdefault(m.domain, []).append(self.ewma[i])
         return {d: float(np.mean(v)) for d, v in out.items()}
 
     def per_color_rate(self, domain: Optional[int] = None) -> Dict[int, float]:
         out: Dict[int, List[float]] = {}
         for i, m in enumerate(self.monitored):
+            if self.flagged[i]:
+                continue
             if domain is not None and m.domain != domain:
                 continue
             out.setdefault(m.color, []).append(self.ewma[i])

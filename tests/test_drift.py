@@ -1,0 +1,400 @@
+"""Drift epochs: host-event timeline + incremental abstraction repair.
+
+Covers the tentpole end to end:
+
+  * `HostEvent` timeline semantics: events apply *while simulated time
+    advances* (mid-wait, so they can land mid-probe), epoch accounting,
+    co-tenant traffic split around an event;
+  * the silent-staleness regression (satellite): before this PR,
+    `SimHost.remap_pages` after `CacheXSession.attach` left
+    `llc_sets()` / `colors()` wrong with no error — `validate()` now
+    reports `stale=True` + degraded ground truth, `check_drift()` sees it
+    guest-side, and `repair()` restores full accuracy at >= 5x fewer
+    probe dispatches than re-attaching (the acceptance ratio), with
+    repaired sets hypercall-verified to behave exactly like freshly
+    built ones (|set| == ways, all lines congruent in one (set, slice));
+  * VSCAN drift signals: a CAT repartition raises an explicit
+    `DriftSignal` after the 3-interval suspicion streak + zero-wait
+    confirm, quarantined sets stop feeding the EWMA, and `repair()`
+    re-detects the new associativity;
+  * epoch-aware persistence: importing a pre-drift export onto a drifted
+    host raises `StaleAbstractionError`; `allow_stale=True` + `repair()`
+    salvages it; v1 (pre-epoch) payloads still import;
+  * closed-loop fleet drift scenarios: CAS keeps the sensitive task
+    steered through each platform's event schedule and the measured
+    abstraction re-converges within a bounded number of intervals
+    (all 6 platforms; only skylake_sp in tier-1, the rest `slow`).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CacheXSession, DriftSignal, HostEvent, ProbeConfig,
+                        StaleAbstractionError, get_platform, list_platforms)
+from repro.core.eviction import VEV, build_many
+from repro.core.host_model import CotenantWorkload, polluter_gen
+from repro.core.probeplan import Validate
+from repro.core import probeplan
+
+FAST_PLATFORM = "skylake_sp"
+
+
+def _matrix_params():
+    return [name if name == FAST_PLATFORM
+            else pytest.param(name, marks=pytest.mark.slow)
+            for name in list_platforms()]
+
+
+def _boot(name, seed):
+    plat = get_platform(name)
+    host, vm = plat.make_host_vm(seed=seed)
+    return plat, host, vm
+
+
+def _congruent(vm, es, ways):
+    """Hypercall ground truth: a behaviorally-fresh minimal LLC set."""
+    return (len(es) == ways
+            and len({vm.hypercall_llc_setslice(int(g))
+                     for g in es.gvas}) == 1)
+
+
+# ---------------------------------------------------------------------------
+# HostEvent timeline
+# ---------------------------------------------------------------------------
+
+def test_events_apply_mid_wait_and_bump_epoch():
+    plat, host, vm = _boot(FAST_PLATFORM, 0)
+    pt0 = vm._page_table.copy()
+    host.schedule_event(HostEvent(at_ms=3.0, kind="remap", fraction=0.25))
+    host.schedule_event(HostEvent(at_ms=5.0, kind="cat", new_llc_ways=4))
+    vm.wait_ms(2.0)                       # before both events
+    assert host.epoch == 0 and (vm._page_table == pt0).all()
+    vm.wait_ms(4.0)                       # crosses both, mid-wait
+    assert host.epoch == 2
+    frac = float((vm._page_table != pt0).mean())
+    assert 0.2 < frac < 0.3
+    assert host.geom.llc.n_ways == 4
+    assert host.time_ms == 6.0
+    assert [e.kind for e in host.event_log] == ["remap", "cat"]
+    assert host.event_log[0].applied_at_ms == 3.0
+    assert vm.hypercall_host_epoch() == 2
+
+
+def test_migrate_remaps_everything_and_can_change_slice_hash():
+    plat, host, vm = _boot(FAST_PLATFORM, 1)
+    pt0 = vm._page_table.copy()
+    host.schedule_event(HostEvent(at_ms=0.5, kind="migrate",
+                                  new_slice_seed=0xBEEF))
+    vm.wait_ms(1.0)
+    assert host.epoch == 1
+    assert float((vm._page_table != pt0).mean()) > 0.99
+    assert host.geom.slice_seed == 0xBEEF
+
+
+def test_cotenant_event_changes_traffic_without_bumping_epoch():
+    plat, host, vm = _boot(FAST_PLATFORM, 2)
+    host.schedule_event(HostEvent(
+        at_ms=0.5, kind="cotenant",
+        add=CotenantWorkload("late_arrival", 0, 10.0, polluter_gen())))
+    host.schedule_event(HostEvent(at_ms=0.7, kind="cotenant",
+                                  retarget={"name": "late_arrival",
+                                            "rate_per_ms": 99.0}))
+    vm.wait_ms(1.0)
+    assert host.epoch == 0
+    assert host.cotenant("late_arrival").rate_per_ms == 99.0
+    host.schedule_event(HostEvent(at_ms=1.5, kind="cotenant",
+                                  remove="late_arrival"))
+    vm.wait_ms(1.0)
+    assert host.cotenant("late_arrival") is None
+
+
+def test_event_splits_cotenant_traffic_around_it():
+    """A cotenant added mid-wait only emits for the remaining span."""
+    plat, host, vm = _boot(FAST_PLATFORM, 3)
+    emitted = []
+
+    def gen(rng, n):
+        emitted.append(n)
+        return np.zeros(n, np.int64)
+
+    host.schedule_event(HostEvent(
+        at_ms=6.0, kind="cotenant",
+        add=CotenantWorkload("half", 0, 10.0, gen)))
+    vm.wait_ms(10.0)
+    assert emitted == [40]       # 10/ms for the 4 ms after the event
+
+
+# ---------------------------------------------------------------------------
+# Validate op + spares
+# ---------------------------------------------------------------------------
+
+def test_sets_carry_verified_spares_and_validate_plan_compiles():
+    plat, host, vm = _boot(FAST_PLATFORM, 4)
+    vev = VEV(vm)
+    ways = plat.effective_ways
+    pool = vev.make_pool(0, ways=ways,
+                         n_uncontrollable_rows=plat.n_llc_rows_per_offset,
+                         n_slices=plat.llc.n_slices)
+    sets = build_many(vm, [{"offset": 0, "pool": pool, "max_sets": 4}],
+                      "llc", ways)[0][0]
+    assert len(sets) == 4
+    for es in sets:                       # every set is drift-validatable
+        assert len(es.spares) >= 1
+        # spares are *verified congruent*: same (set, slice) as members
+        cell = vm.hypercall_llc_setslice(int(es.gvas[0]))
+        assert vm.hypercall_llc_setslice(int(es.spares[0])) == cell
+    from repro.core.eviction import validate_plan
+    plan = validate_plan(sets, 1, [0] * len(sets), 125, 1)
+    assert isinstance(plan.ops[0], Validate)
+    assert plan.n_dispatches == 1         # whole list in one fused dispatch
+    assert vev.validate_sets(sets, "llc").all()
+    # spares survive the export contract
+    rt = type(sets[0]).from_state(sets[0].state_dict())
+    np.testing.assert_array_equal(rt.spares, sets[0].spares)
+
+
+def test_validate_op_fuses_and_counts_like_vote():
+    lanes = (np.arange(3, dtype=np.int64),)
+    a = probeplan.ProbePlan(ops=(Validate(lanes=lanes, vcpus=(0,),
+                                          threshold=125, votes=2),))
+    b = probeplan.ProbePlan(ops=(Validate(lanes=lanes, vcpus=(0,),
+                                          threshold=125, votes=2),))
+    fused, spans = probeplan.fuse([a, b])
+    assert isinstance(fused.ops[0], Validate)
+    assert len(fused.ops[0].lanes) == 2
+    assert fused.n_dispatches == 2        # votes, shared by both plans
+
+
+# ---------------------------------------------------------------------------
+# the silent-staleness regression + incremental repair (whole matrix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", _matrix_params())
+def test_remap_staleness_is_caught_and_repaired(name):
+    """Regression for the pre-drift bug: after `remap_pages`, an attached
+    session served wrong `llc_sets()` / `colors()` forever with no error.
+    Now: `validate()` reports staleness, `check_drift()` sees it from the
+    guest, and `repair()` restores ground-truth accuracy at >= 5x fewer
+    dispatches than the original attach — with repaired sets behaving
+    exactly like freshly built ones (hypercall-verified congruence)."""
+    plat, host, vm = _boot(name, 13)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=13),
+                                   eager=True)
+    pages = vm.alloc_pages(8 * plat.n_l2_colors)
+    session.colors().colors_of(pages)
+    session.refresh()
+    attach_dispatches = vm.stat_passes
+    before = session.validate()
+    assert not before["stale"]
+
+    # the silent invalidation: a quarter of the guest rebacked mid-wait
+    host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5,
+                                  kind="remap", fraction=0.25))
+    vm.wait_ms(1.0)
+
+    after = session.validate()
+    assert after["stale"], "epoch drift must be visible to validate()"
+    degraded = (after["vcol_accuracy"] < before["vcol_accuracy"]
+                or after["vev_verified"] < before["vev_verified"])
+    assert degraded, "a 25% remap must damage the abstraction"
+    check = session.check_drift()
+    assert check["any_broken"], "guest-side check must see the damage"
+
+    d0 = vm.stat_passes
+    report = session.repair()
+    repair_dispatches = vm.stat_passes - d0
+    assert report.anything_broken and report.epoch == 1
+    assert session.topology().epoch == 1
+
+    fixed = session.validate()
+    assert not fixed["stale"]
+    assert fixed["vev_verified"] == fixed["vev_built"]
+    if plat.l2_filter_reliable and not plat.noise:
+        assert fixed["vcol_accuracy"] == 1.0
+    # repaired sets are behaviorally identical to freshly built ones
+    ways = session.effective_ways()
+    for es in session.llc_sets():
+        assert _congruent(vm, es, ways)
+    # ... and the whole pass stays >= 5x cheaper than re-probing
+    assert repair_dispatches * 5 <= attach_dispatches, (
+        f"repair cost {repair_dispatches} vs attach {attach_dispatches}")
+
+
+def test_late_stage_build_does_not_mask_earlier_staleness():
+    """A stage probed *after* a drift event must not overwrite the epoch
+    stamp of stages probed before it: colors probed at epoch 0 are still
+    epoch-0 data when VSCAN builds at epoch 1, so validate() stays stale
+    and the export still refuses to import."""
+    plat, host, vm = _boot(FAST_PLATFORM, 22)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=22))
+    pages = vm.alloc_pages(8)
+    session.colors().colors_of(pages)          # probed at host epoch 0
+    host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5,
+                                  kind="remap", fraction=0.25))
+    vm.wait_ms(1.0)                            # host drifts to epoch 1
+    session.monitored_sets()                   # VSCAN builds at epoch 1
+    truth = session.validate()
+    assert truth["probed_epoch"] == 0 and truth["stale"]
+    with pytest.raises(StaleAbstractionError):
+        CacheXSession.import_(vm.reboot(seed=23), session.export())
+    # a repair re-validates everything and clears the staleness
+    session.repair()
+    assert not session.validate()["stale"]
+
+
+def test_repair_is_noop_on_healthy_session():
+    plat, host, vm = _boot(FAST_PLATFORM, 21)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=21),
+                                   eager=True)
+    report = session.repair()
+    assert not report.anything_broken and report.epoch == 0
+    assert session.topology().epoch == 0
+
+
+# ---------------------------------------------------------------------------
+# VSCAN drift signals (CAT repartition)
+# ---------------------------------------------------------------------------
+
+def test_cat_repartition_raises_drift_signal_and_repair_redetects_ways():
+    plat, host, vm = _boot(FAST_PLATFORM, 9)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=9),
+                                   eager=True)
+    sigs = []
+    token = session.subscribe_drift(sigs.append)
+    host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5,
+                                  kind="cat", new_llc_ways=4))
+    vm.wait_ms(1.0)
+    ewma_before = None
+    for k in range(6):
+        view = session.refresh()
+        if sigs:
+            break
+        ewma_before = dict(view.per_domain)
+    assert sigs, "sustained self-conflicts must confirm into a DriftSignal"
+    assert isinstance(sigs[0], DriftSignal)
+    assert sigs[0].kind == "self_conflict" and sigs[0].set_indices
+    # quarantined sets stop feeding the aggregates (garbage not folded in)
+    flagged = session._vs.flagged
+    assert flagged[list(sigs[0].set_indices)].all()
+    view = session.refresh()
+    # every monitored set broke at once here, so the aggregate is empty
+    # until repair brings the monitor back — not polluted with garbage
+    assert view.per_domain == {} or max(view.per_domain.values()) < 100.0
+
+    report = session.repair()
+    assert report.ways_changed and report.effective_ways == 4
+    topo = session.topology()
+    assert topo.effective_ways == 4 and topo.detected_associativity == 4
+    assert not session._vs.flagged.any()      # quarantine lifted
+    for es in session.llc_sets():             # re-minimalized at 4 ways
+        assert _congruent(vm, es, 4)
+    truth = session.validate()
+    assert truth["vev_verified"] == truth["vev_built"] and not truth["stale"]
+    session.unsubscribe(token)
+
+
+def test_heavy_contention_does_not_false_positive_drift():
+    """Legit load full-evicts monitored sets for many intervals; the
+    zero-wait confirm must keep rejecting it (no quarantine)."""
+    plat, host, vm = _boot(FAST_PLATFORM, 10)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=10))
+    session.monitored_sets()
+    llc = plat.llc
+    host.add_cotenant(CotenantWorkload(
+        "storm", 0, 0.8 * llc.n_sets * llc.n_slices,
+        polluter_gen(region_pages=2048)))
+    sigs = []
+    session.subscribe_drift(sigs.append)
+    for _ in range(8):
+        session.refresh()
+    assert not sigs
+    assert not session._vs.flagged.any()
+
+
+# ---------------------------------------------------------------------------
+# epoch-aware persistence
+# ---------------------------------------------------------------------------
+
+def test_stale_import_raises_and_allow_stale_plus_repair_salvages():
+    plat, host, vm = _boot(FAST_PLATFORM, 31)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=31),
+                                   eager=True)
+    js = session.export_json()
+    host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5,
+                                  kind="remap", fraction=0.2))
+    vm.wait_ms(1.0)
+    vm2 = vm.reboot(seed=32)
+    with pytest.raises(StaleAbstractionError):
+        CacheXSession.import_json(vm2, js)
+    restored = CacheXSession.import_json(vm2, js, allow_stale=True)
+    report = restored.repair()
+    assert report.anything_broken
+    truth = restored.validate()
+    assert not truth["stale"] and truth["ways_match"]
+    assert truth["vev_verified"] == truth["vev_built"]
+
+
+def test_fresh_export_reimports_cleanly_with_epoch():
+    plat, host, vm = _boot(FAST_PLATFORM, 33)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=33),
+                                   eager=True)
+    data = session.export()
+    assert data["format"] == "cachex-abstraction/v2"
+    assert data["host_epoch"] == 0 and data["abstraction_epoch"] == 0
+    restored = CacheXSession.import_(vm.reboot(seed=34), data)
+    assert restored.topology() == session.topology()
+
+
+def test_v1_payload_imports_without_epoch_check():
+    """Pre-drift exports carry no epoch; they import unchecked (the
+    documented MIGRATION path) even on a drifted host."""
+    plat, host, vm = _boot(FAST_PLATFORM, 35)
+    session = CacheXSession.attach(vm, plat,
+                                   ProbeConfig.for_platform(plat, seed=35))
+    session.colors()
+    data = session.export()
+    data["format"] = "cachex-abstraction/v1"
+    for k in ("host_epoch", "abstraction_epoch", "effective_ways"):
+        data.pop(k, None)
+    host.schedule_event(HostEvent(at_ms=host.time_ms + 0.5,
+                                  kind="remap", fraction=0.1))
+    vm.wait_ms(1.0)
+    restored = CacheXSession.import_(vm.reboot(seed=36), data)
+    assert restored.colors().n_colors == session.colors().n_colors
+
+
+# ---------------------------------------------------------------------------
+# closed-loop fleet drift scenarios (whole matrix; tier-1: skylake_sp)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", _matrix_params())
+def test_fleet_recovers_steering_after_drift_events(name):
+    """Acceptance: with each platform's DriftSpec schedule live
+    (migration / CAT repartition / remap landing mid-window), the CAS
+    closed loop repairs the abstraction and keeps the sensitive task
+    steered — measured re-convergence bounded, never `-1` (which would
+    mean the run ended still de-converged)."""
+    from repro.core.fleet import FleetSim
+    sim = FleetSim(name, policy="cas", cap="on", seed=0, drift=True)
+    assert sim.drift_specs, "every platform ships a drift scenario"
+    r = sim.run()
+    assert r.drift_events == len(sim.drift_specs)
+    assert r.repairs >= 1, "the repair loop must have fixed something"
+    assert 0 <= r.recovery_max_intervals <= 6
+    assert r.quiet_residency >= 0.75, (
+        "CAS must keep steering through drift")
+
+
+def test_fleet_without_drift_reports_zero_drift_fields():
+    from repro.core.fleet import FleetSim
+    r = FleetSim(FAST_PLATFORM, policy="cas", cap="on", seed=0,
+                 n_intervals=6, warmup=2).run()
+    assert (r.drift_events, r.repairs, r.repair_dispatches,
+            r.recovery_max_intervals) == (0, 0, 0, 0)
