@@ -19,6 +19,10 @@ drift    — host-event drift scenarios: incremental `session.repair()` vs
            the PR's >=5x acceptance metric) + closed-loop fleet recovery
            after each platform's event schedule; writes
            bench-drift-recovery.csv
+tune     — ProbePlan cost model + lowering autotuner: model-vs-measured
+           dispatch counts per platform, cold measured tune vs cached
+           re-tune, and the per-knob cutout trial table; writes
+           bench-tune-lowering.csv
 """
 
 from __future__ import annotations
@@ -498,6 +502,80 @@ def bench_drift():
     emit("drift.report_csv", 0.0, f"path={path};rows={len(rows)}")
 
 
+def bench_tune():
+    """Cost-model + autotuner acceptance bench, two halves:
+
+    * model-vs-measured: per platform, `plan_cost` of the session's
+      monitoring plan must predict exactly the probe-dispatch delta one
+      execution produces (the ROADMAP's model==measured assertion; the
+      per-platform regression test covers every registry entry);
+    * tuner: a cold measured tune (cutout timing on scratch VMs) vs the
+      cached re-tune on the same (platform, plan signature, n_guests)
+      key, with the chosen lowering and the full per-knob trial table.
+
+    Writes bench-tune-lowering.csv next to the other fleet artifacts.
+    """
+    import os
+
+    from repro.core import (CacheXSession, ProbeConfig, get_platform,
+                            plan_cost, probe_dispatch_count)
+    from repro.core import plancost, probeplan
+
+    platforms = [p for p in os.environ.get(
+        "TUNE_PLATFORMS", "skylake_sp,milan_ccx").split(",") if p]
+    rows = []
+    matched = 0
+    for name in platforms:
+        plat = get_platform(name)
+        host, vm = plat.make_host_vm(seed=11)
+        session = CacheXSession.attach(
+            vm, plat, ProbeConfig.for_platform(plat, seed=11))
+        plan = session.plan()
+        cost = plan_cost(plan, platform=plat)
+        d0 = probe_dispatch_count()
+        probeplan.execute(vm, plan)
+        measured = probe_dispatch_count() - d0
+        ok = cost.dispatches == measured == plan.n_dispatches
+        matched += int(ok)
+        emit(f"tune.model_vs_measured_{name}", 0.0,
+             f"model={cost.dispatches};measured={measured};"
+             f"n_dispatches={plan.n_dispatches};match={ok};"
+             f"padded_steps={cost.padded_steps};dominant={cost.dominant}")
+
+        plancost.clear_tune_cache()
+        with timer() as t_cold:
+            rep = session.tuned_lowering(n_guests=4, measure=True,
+                                         force=True)
+        with timer() as t_cached:
+            rep2 = session.tuned_lowering(n_guests=4, measure=True)
+        ch = rep.chosen
+        emit(f"tune.lowering_{name}", t_cold["us"],
+             f"fuse={ch.fuse_commits};lane_bucket={ch.lane_bucket};"
+             f"lockstep={ch.lockstep};trials={len(rep.trials)};"
+             f"cached={rep2.cached};cached_us={t_cached['us']:.0f}")
+        record(f"tune_cold_wall_s.{name}",
+               round(t_cold["us"] / 1e6, 2),
+               f"{len(rep.trials)} cutout trials, chosen lane_bucket="
+               f"{ch.lane_bucket} fuse={ch.fuse_commits} lockstep="
+               f"{ch.lockstep}; cached re-tune {t_cached['us']:.0f}us; "
+               f"`--only tune`")
+        for tr in rep.trials:
+            rows.append((name, tr.knob, tr.candidate,
+                         "x".join(str(x) for x in tr.cutout),
+                         f"{tr.measured_s * 1e6:.1f}", tr.pred_misses,
+                         f"{tr.score:.4f}", tr.chosen))
+    record(f"tune_model_vs_measured_match.{len(platforms)}platforms",
+           matched, "plan_cost dispatches == executed dispatch delta; "
+           "`--only tune`")
+    path = "bench-tune-lowering.csv"
+    with open(path, "w") as f:
+        f.write("platform,knob,candidate,cutout_shape,measured_us,"
+                "pred_compile_misses,score,chosen\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    emit("tune.report_csv", 0.0, f"path={path};rows={len(rows)}")
+
+
 def run_all():
     bench_table2_eviction_construction()
     bench_table3_associativity()
@@ -512,3 +590,4 @@ def run_all():
     bench_fleet()
     bench_plans()
     bench_drift()
+    bench_tune()

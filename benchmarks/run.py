@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import argparse
 import csv as _csv
-import io
 import json
 import os
 import sys
@@ -28,35 +27,55 @@ import time
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
 
-def flush_trajectory(pr: str, sections_run, wall_s: float) -> None:
-    """Write BENCH_<pr>.json and append before/after rows to BENCH.csv."""
+def flush_trajectory(pr: str, sections_run, wall_s: float,
+                     bench_dir: str = BENCH_DIR) -> None:
+    """Write BENCH_<pr>.json and merge before/after rows into BENCH.csv.
+
+    Rows are deduped on (pr, metric): re-running the same PR's bench
+    *replaces* its rows in place (keeping their original "before", so the
+    ``before = previous PR's after`` chain survives reruns) instead of
+    appending duplicates.  A metric's "before" for a new row is the most
+    recent "after" recorded by a *different* PR."""
     from benchmarks.common import TRAJECTORY
     payload = {"pr": pr, "sections": list(sections_run),
                "wall_s": round(wall_s, 1), "metrics": TRAJECTORY}
-    json_path = os.path.join(BENCH_DIR, f"BENCH_{pr}.json")
+    json_path = os.path.join(bench_dir, f"BENCH_{pr}.json")
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"# trajectory_json,{json_path},{len(TRAJECTORY)}", flush=True)
     if not TRAJECTORY:
         return
-    csv_path = os.path.join(BENCH_DIR, "BENCH.csv")
-    last = {}
+    csv_path = os.path.join(bench_dir, "BENCH.csv")
+    rows = []
+    header = ["pr", "metric", "before", "after", "notes"]
     if os.path.exists(csv_path):
         with open(csv_path) as f:
-            for row in _csv.DictReader(f):
-                if row.get("metric"):
-                    last[row["metric"]] = row.get("after", "")
-    with open(csv_path, "a") as f:
+            r = _csv.reader(f)
+            header = next(r, header)
+            rows = [row + [""] * (5 - len(row)) for row in r if row]
+    mine = {row[1]: row for row in rows if row[0] == pr}
+    last = {}          # metric -> latest "after" from rows of OTHER PRs
+    for row in rows:
+        if row[0] != pr and len(row) > 3 and row[1]:
+            last[row[1]] = row[3]
+    replaced = appended = 0
+    for m in TRAJECTORY:
+        if m["metric"] in mine:    # rerun: replace in place, keep "before"
+            old = mine[m["metric"]]
+            old[3] = str(m["value"])
+            old[4] = m["notes"]
+            replaced += 1
+        else:
+            rows.append([pr, m["metric"], last.get(m["metric"], ""),
+                         str(m["value"]), m["notes"]])
+            appended += 1
+    with open(csv_path, "w", newline="") as f:
         w = _csv.writer(f, lineterminator="\n")
-        for m in TRAJECTORY:
-            buf = io.StringIO()
-            _csv.writer(buf, lineterminator="").writerow(
-                [pr, m["metric"], last.get(m["metric"], ""),
-                 m["value"], m["notes"]])
-            f.write(buf.getvalue() + "\n")
-    print(f"# trajectory_csv,{csv_path},appended={len(TRAJECTORY)}",
-          flush=True)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"# trajectory_csv,{csv_path},appended={appended},"
+          f"replaced={replaced}", flush=True)
 
 
 def main() -> None:
@@ -84,6 +103,7 @@ def main() -> None:
         ("fleet", bench_paper_tables.bench_fleet),
         ("plans", bench_paper_tables.bench_plans),
         ("drift", bench_paper_tables.bench_drift),
+        ("tune", bench_paper_tables.bench_tune),
         ("kernels", bench_system.bench_kernels),
         ("train", bench_system.bench_train_step),
         ("serve", bench_system.bench_serve_step),

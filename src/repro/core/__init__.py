@@ -28,9 +28,14 @@ docs/ARCHITECTURE.md):
                validate_page_colors (recolor only what broke)
   vscan        VSCAN — windowed Prime+Probe contention monitoring (§3.3);
                drift suspicion -> DriftSignal + quarantine
+  plancost     analytic ProbePlan cost model (`plan_cost`, the process-wide
+               compile-shape cache) + the measured lowering autotuner
+               (`tune_lowering`: plan cutouts timed on scratch VMs;
+               `plan_lowering()` becomes a default the tuner overrides)
   abstraction  CacheXSession — the probed abstraction as a query API
                (topology/colors/contention + plan/execute + subscribe +
-               epoch-stamped export/import + check_drift/repair)
+               epoch-stamped export/import + check_drift/repair +
+               tuned_lowering)
   cas          CAS — contention tiers + placement policies (§4.1)
   cap          CAP — color-aware page-cache allocation (§4.2)
   runner       run_cachex: one-shot report-builder over a session
@@ -52,6 +57,8 @@ from repro.core.fleet import (FleetReport, FleetSim, FleetWorkload,
                               speedup_summary)
 from repro.core.host_model import (CotenantWorkload, GuestVM, HostEvent,
                                    SimHost, probe_dispatch_count)
+from repro.core.plancost import (PlanCost, TuneReport, clear_tune_cache,
+                                 plan_cost, tune_lowering)
 from repro.core.platforms import (CachePlatform, DriftSpec, all_platforms,
                                   get_platform, list_platforms,
                                   register_platform)
@@ -80,6 +87,7 @@ __all__ = [
     "GuestVM",
     "HostEvent",
     "MonitoredSet",
+    "PlanCost",
     "PlanLowering",
     "PlanResult",
     "ProbeConfig",
@@ -89,18 +97,21 @@ __all__ = [
     "StaleAbstractionError",
     "TierTracker",
     "TopologyView",
+    "TuneReport",
     "VCOL",
     "VEV",
     "VSCAN_POOL_CAP_PAGES",
     "VScan",
     "all_platforms",
     "allow_pull",
+    "clear_tune_cache",
     "color_accuracy",
     "dataclass_csv_header",
     "dataclass_csv_row",
     "fig10_summary",
     "get_platform",
     "list_platforms",
+    "plan_cost",
     "policy_place",
     "probe_dispatch_count",
     "register_platform",
@@ -111,4 +122,5 @@ __all__ = [
     "select_vcpu",
     "speedup_summary",
     "theoretical_coverage",
+    "tune_lowering",
 ]

@@ -581,6 +581,31 @@ class CacheXSession:
         self._ensure_vscan()
         return self._vs.monitor_plan()
 
+    def tuned_lowering(self, n_guests: int = 1, measure: bool = False,
+                       force: bool = False):
+        """Replace the session's lowering with the autotuner's choice for
+        its monitoring plan (`repro.core.plancost.tune_lowering`) and
+        return the :class:`~repro.core.plancost.TuneReport`.
+
+        ``measure=False`` (the default) scans the candidate lowerings on
+        the analytic cost model alone — microseconds, no probing —
+        unless a *measured* result for (platform, plan signature,
+        n_guests) is already cached, which is then reused as-is.
+        ``measure=True`` times plan cutouts on scratch VMs (a few seconds
+        the first time; cached afterwards).  ``n_guests`` sizes the
+        lockstep knob for the co-running group the caller intends
+        (`FleetSim.tune` passes the fleet size)."""
+        from repro.core import plancost
+        plan = self.plan()
+        report = plancost.tune_lowering(self.platform, plan,
+                                        n_guests=n_guests,
+                                        seed=self.config.seed,
+                                        measure=measure, force=force)
+        self.config = self.config.replace(lowering=report.chosen)
+        if self._vs is not None:
+            self._vs.lowering = report.chosen
+        return report
+
     def execute(self, plan: ProbePlan) -> Union[ContentionView, PlanResult]:
         """Execute a ProbePlan against this session's VM.  Monitoring
         plans (from :meth:`plan`) are applied and published, returning the

@@ -283,6 +283,14 @@ class FleetSim:
         # self-conflict) trigger `session.repair()` before the next probe.
         self.drift_specs: Tuple[DriftSpec, ...] = (
             tuple(plat0.drift) if drift is True else tuple(drift or ()))
+        # intervals where a geometry-*changing* event (migrate/cat) can
+        # land mid-window: multi-guest lockstep execution falls back to
+        # per-guest execution for exactly these rounds (geometry-preserving
+        # remap/cotenant drift keeps lockstep everywhere — see
+        # DriftSpec.geometry_preserving)
+        self._seq_only_intervals = {spec.at_interval
+                                    for spec in self.drift_specs
+                                    if not spec.geometry_preserving}
         self.repair_on_drift = repair_on_drift
         self.revalidate_every = revalidate_every
         self._repair_pending = False
@@ -316,6 +324,20 @@ class FleetSim:
         # second drives the page-cache stream
         self._sens = self.tasks[0]
         self._streamer = self.tasks[min(1, len(self.tasks) - 1)]
+
+    # ----------------------------------------------------------------- tune
+    def tune(self, n_guests: int = 1, measure: bool = True,
+             force: bool = False):
+        """Autotune this sim's plan lowering
+        (``CacheXSession.tuned_lowering``): time candidate lowerings on
+        plan cutouts and install the winner for every plan the sim yields.
+        ``n_guests`` sizes the lockstep knob for the co-running group
+        (`run_fleet_matrix` passes the fleet size; later sims of the same
+        platform hit the tune cache and pay nothing)."""
+        report = self.session.tuned_lowering(n_guests=n_guests,
+                                             measure=measure, force=force)
+        self.lowering = report.chosen
+        return report
 
     # ------------------------------------------------------------------ CAP
     def _true_color(self, pages: Sequence[int]) -> int:
@@ -525,8 +547,11 @@ class FleetSim:
             # probe + decide: one windowed Prime+Probe interval over every
             # domain; the published ContentionView drives the subscribed
             # CAS tiers and CAP ranking (decision stack never polls VScan)
+            seq_only = k in self._seq_only_intervals
             if self._plan_route:
                 mplan = self.session.plan()
+                if seq_only:
+                    mplan.meta["seq_only"] = True
                 view = self.session.apply(mplan, (yield mplan))
             else:
                 view = self.session.refresh()
@@ -546,17 +571,20 @@ class FleetSim:
             # measure: the working set's latency after the stream (batched
             # timed lanes; uncommitted measurement probe)
             if self._plan_route:
+                meta = {"seq_only": True} if seq_only else {}
                 yield ProbePlan(
                     ops=(Commit(segments=(
                         Segment(gvas=self.ws_lines, vcpu=self._sens.vcpu),
                         Segment(gvas=stream_lines,
                                 vcpu=self._streamer.vcpu))),),
-                    label="fleet.traverse", hints=self.lowering)
+                    label="fleet.traverse", hints=self.lowering,
+                    meta=dict(meta))
                 lres = yield ProbePlan(
                     ops=(WarmTimer(),
                          Measure(lanes=(self.ws_lines,),
                                  vcpus=(self._sens.vcpu,))),
-                    label="fleet.ws_lat", hints=self.lowering)
+                    label="fleet.ws_lat", hints=self.lowering,
+                    meta=dict(meta))
                 lat = float(np.mean(lres.last[0]))
             else:
                 vm.access(self.ws_lines, vcpu=self._sens.vcpu)
@@ -630,7 +658,15 @@ def _run_lockstep(sims: List[FleetSim]) -> List[FleetReport]:
     (`probeplan.execute_many`) — one dispatch per probe point per tick for
     the whole fleet, instead of one per guest.  Per-guest results, and
     therefore every report metric, are bit-identical to running each sim
-    alone (each guest keeps its own host state, rng and TSC noise)."""
+    alone (each guest keeps its own host state, rng and TSC noise).
+
+    Rounds whose plans are tagged ``meta["seq_only"]`` (intervals where a
+    geometry-changing drift event can land mid-window — see
+    ``DriftSpec.geometry_preserving``) execute per guest instead: a
+    cat/migrate event firing inside one guest's Wait would change that
+    guest's machine geometry mid-program, and a multi-guest dispatch
+    needs one shared geometry.  All sims run the same drift schedule, so
+    geometries re-converge by the next round and lockstep resumes."""
     gens = {i: sim.steps() for i, sim in enumerate(sims)}
     reports: List[Optional[FleetReport]] = [None] * len(sims)
     pending: Dict[int, ProbePlan] = {}
@@ -641,8 +677,12 @@ def _run_lockstep(sims: List[FleetSim]) -> List[FleetReport]:
             reports[i] = e.value
     while pending:
         order = sorted(pending)
-        results = probeplan.execute_many([sims[i].vm for i in order],
-                                         [pending[i] for i in order])
+        if any(pending[i].meta.get("seq_only") for i in order):
+            results = [probeplan.execute(sims[i].vm, pending[i])
+                       for i in order]
+        else:
+            results = probeplan.execute_many([sims[i].vm for i in order],
+                                             [pending[i] for i in order])
         nxt: Dict[int, ProbePlan] = {}
         for i, res in zip(order, results):
             try:
@@ -657,6 +697,7 @@ def run_fleet_matrix(platforms: Optional[List[str]] = None,
                      combos: Sequence[Tuple[str, str]] = DEFAULT_COMBOS,
                      seeds: Sequence[int] = (0,),
                      lockstep: bool = True,
+                     tune: bool = False,
                      **kw) -> List[FleetReport]:
     """The policy x platform x seed sweep behind Fig 10 / Tables 7-8: every
     (platform, policy, cap, seed) combination through the full closed loop.
@@ -669,19 +710,27 @@ def run_fleet_matrix(platforms: Optional[List[str]] = None,
     execution, cutting physical probe dispatches by ~the guest count while
     reproducing the sequential reports bit for bit.  Falls back to
     sequential runs when plans are disabled or the platform's lowering
-    hints forbid lockstep (non-LRU replacement)."""
+    hints forbid lockstep (non-LRU replacement); drift scenarios keep
+    lockstep, dropping to per-guest execution only for the intervals
+    where a geometry-changing event can land (see :func:`_run_lockstep`).
+
+    ``tune=True`` runs the measured lowering autotuner per platform
+    (`FleetSim.tune`; the first sim pays the cutout timing, the rest hit
+    the tune cache) and runs the sweep under the tuned lowering — which
+    may legitimately differ from the hinted one, including disabling
+    lockstep where the model says vectorized-over-guests dispatch does
+    not pay on the measuring machine."""
     from repro.core.platforms import list_platforms
     names = platforms if platforms is not None else list_platforms()
     reports: List[FleetReport] = []
     for n in names:
         sims = [FleetSim(n, policy=pol, cap=cap, seed=s, **kw)
                 for pol, cap in combos for s in seeds]
+        if tune:
+            for sim in sims:
+                sim.tune(n_guests=len(sims))
         hints = sims[0].lowering or probeplan.DEFAULT_LOWERING
-        # drift scenarios force sequential runs: per-sim window divergence
-        # can land a cat/migrate event in different intervals, so co-running
-        # guests would stop sharing one machine geometry mid-dispatch
         if (lockstep and len(sims) > 1 and hints.lockstep
-                and not any(s.drift_specs for s in sims)
                 and all(s.use_plans and s.use_batch for s in sims)):
             reports.extend(_run_lockstep(sims))
         else:

@@ -51,6 +51,18 @@ _STREAM_BUCKET = 512  # pad access streams to multiples of this (compile reuse)
 _LANE_BUCKET = 128    # pad batched-probe lanes (T) to multiples of this
 _BATCH_BUCKET = 8     # pad batched-probe batch dim (B) to multiples of this
 
+# Batched-measurement padding climbs a power-of-two ladder after bucket
+# rounding: a matrix sweep otherwise sees tens of distinct (B, T) shapes
+# (every lane-count a stage ever probes), and each distinct shape is a
+# fresh XLA compile of the batched kernels — the dominant share of the
+# `run_fleet_matrix` wall.  Ladder padding is exact for measurement lanes:
+# they run uncommitted against a state snapshot, each lane's rng forks
+# from its own lane index, and padded tail steps only touch padded
+# positions — so per-lane results are bit-identical at any padding.
+# Committed streams keep plain bucket padding (`_pad_to_bucket`): under
+# random replacement the machine rng advances per step, padded steps
+# included, so their padding is part of the replayed sequence.
+
 # Physical probe-dispatch accounting: one count per jitted access-stream
 # call issued on behalf of guest probing (untimed, timed, batched, and the
 # multi-guest fused paths).  Co-tenant background traffic (`run_cotenants`)
@@ -80,6 +92,26 @@ def _pad_to_bucket(arr: np.ndarray, fill) -> np.ndarray:
 
 def _round_up(n: int, bucket: int) -> int:
     return max(bucket, ((n + bucket - 1) // bucket) * bucket)
+
+
+def _ladder(n: int) -> int:
+    """Next power of two >= n (the compile-shape ladder, see above)."""
+    return 1 << (max(1, int(n)) - 1).bit_length()
+
+
+# `repro.core.plancost`'s process-wide compile-shape cache: every physical
+# dispatch notes its (kernel kind, machine geometry, padded shape) so the
+# cost model can predict which lowerings hit already-compiled kernels.
+# Imported lazily — plancost imports probeplan which imports this module.
+_plancost = None
+
+
+def _note_shape(kind: str, geom, shape) -> None:
+    global _plancost
+    if _plancost is None:
+        from repro.core import plancost as _pc
+        _plancost = _pc
+    _plancost.SHAPE_CACHE.note(kind, geom, shape)
 
 
 @dataclasses.dataclass
@@ -363,6 +395,7 @@ class SimHost:
         pc = _pad_to_bucket(cores.astype(np.int32), 0)
         pt = np.zeros(len(pb), bool)
         pt[:n] = cotenant
+        _note_shape("stream", self.geom, (len(pb),))
         self.state, lats = cachesim.access_stream(
             self.state, self.geom, jnp.asarray(pb), jnp.asarray(pc),
             jnp.asarray(pt))
@@ -382,14 +415,15 @@ class SimHost:
         (per-platform plan-lowering hints; padding lanes/steps are no-ops).
         """
         n_lanes = len(lanes)
-        pb_lanes = _round_up(n_lanes, batch_bucket or _BATCH_BUCKET)
-        t = _round_up(max((len(l) for l in lanes), default=1),
-                      lane_bucket or _LANE_BUCKET)
+        pb_lanes = _ladder(_round_up(n_lanes, batch_bucket or _BATCH_BUCKET))
+        t = _ladder(_round_up(max((len(l) for l in lanes), default=1),
+                              lane_bucket or _LANE_BUCKET))
         blocks = np.full((pb_lanes, t), -1, np.int32)
         lane_cores = np.zeros(pb_lanes, np.int32)
         for i, (lane, core) in enumerate(zip(lanes, cores)):
             blocks[i, :len(lane)] = lane
             lane_cores[i] = core
+        _note_shape("batched", self.geom, (pb_lanes, t))
         lats = cachesim.access_streams_batched(
             self.state, self.geom, jnp.asarray(blocks),
             jnp.asarray(lane_cores), jnp.zeros(pb_lanes, bool),
@@ -684,6 +718,7 @@ def commit_segments_multi(vms: Sequence["GuestVM"],
             vms[i].stat_accesses += len(b)
             vms[i].stat_passes += 1
     _count_probe_dispatch()
+    _note_shape("committed", geom, (g_n, t))
     states = cachesim.stack_states([vm.host.state for vm in vms])
     new_states, _ = cachesim.access_streams_committed(
         states, geom, jnp.asarray(blocks), jnp.asarray(cores),
@@ -719,8 +754,8 @@ def timed_access_batch_multi(vms: Sequence["GuestVM"],
         max_t = max(max_t, max((len(l) for l in lanes), default=1))
     if not any(lanes for lanes, _, _ in prepared):
         return [[] for _ in vms]   # standalone path dispatches nothing
-    b_pad = _round_up(max_b, batch_bucket or _BATCH_BUCKET)
-    t_pad = _round_up(max_t, lane_bucket or _LANE_BUCKET)
+    b_pad = _ladder(_round_up(max_b, batch_bucket or _BATCH_BUCKET))
+    t_pad = _ladder(_round_up(max_t, lane_bucket or _LANE_BUCKET))
     blocks_arr = np.full((g_n, b_pad, t_pad), -1, np.int32)
     cores_arr = np.zeros((g_n, b_pad), np.int32)
     salts = np.zeros(g_n, np.uint32)
@@ -734,6 +769,7 @@ def timed_access_batch_multi(vms: Sequence["GuestVM"],
         vm.stat_accesses += sum(len(b) for b in blocks)
         vm.stat_passes += 1
     _count_probe_dispatch()
+    _note_shape("batched_multi", geom, (g_n, b_pad, t_pad))
     states = cachesim.stack_states([vm.host.state for vm in vms])
     lats = np.asarray(cachesim.access_streams_batched_multi(
         states, geom, jnp.asarray(blocks_arr), jnp.asarray(cores_arr),

@@ -86,6 +86,19 @@ class DriftSpec:
                          new_slice_seed=self.new_slice_seed,
                          note=self.note or f"drift@interval{self.at_interval}")
 
+    @property
+    def geometry_preserving(self) -> bool:
+        """Whether the event leaves :class:`MachineGeometry` untouched.
+
+        ``remap`` moves guest pages and ``cotenant`` changes traffic —
+        both mutate state the multi-guest lockstep path snapshots and
+        restores exactly, so lockstep execution stays bit-identical
+        across them.  ``migrate`` / ``cat`` re-provision the machine
+        (slice hash, way count): co-running guests momentarily differ in
+        geometry and `execute_many` must fall back to sequential
+        execution around the interval where the event lands."""
+        return self.kind in ("remap", "cotenant")
+
 
 @dataclasses.dataclass(frozen=True)
 class CachePlatform:
@@ -197,7 +210,11 @@ class CachePlatform:
         return self.llc.n_ways >= self.l2.n_ways
 
     def plan_lowering(self) -> PlanLowering:
-        """Effective ProbePlan lowering hints for this scenario.  Fused
+        """Default ProbePlan lowering hints for this scenario — a starting
+        point, not law: `repro.core.plancost.tune_lowering` overrides it
+        with a measured choice per (platform, plan signature), and
+        ``CacheXSession.tuned_lowering`` / ``FleetSim.tune`` install that
+        override.  Fused
         committed segments and multi-guest lockstep execution replay the
         per-dispatch path access for access — exact under LRU; under
         non-deterministic replacement each fused/padded trial would draw a

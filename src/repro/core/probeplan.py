@@ -174,21 +174,42 @@ class ProbePlan:
 
     def signature(self) -> Tuple[str, ...]:
         """Structural signature: op kind per position (congruence key for
-        :func:`fuse` / :func:`execute_many`)."""
+        :func:`fuse` / :func:`execute_many`, and the tune-cache key in
+        `repro.core.plancost`) — lowering-independent by design."""
         return tuple(type(op).__name__ for op in self.ops)
+
+    def effective_lowering(self) -> PlanLowering:
+        """The lowering :func:`execute` will actually use — the plan's
+        hints, or :data:`DEFAULT_LOWERING` when it carries none."""
+        return self.hints or DEFAULT_LOWERING
 
     @property
     def n_dispatches(self) -> int:
-        """Dispatches one (fused) execution of this plan will issue."""
+        """Dispatches one execution of this plan will issue under its
+        *effective* lowering: an unfused Commit (``fuse_commits=False``,
+        what ``plan_lowering()`` forces on non-LRU platforms) is one
+        dispatch per non-empty segment, not one fused dispatch — counting
+        from the requested lowering made model and measurement disagree
+        exactly there."""
+        hints = self.effective_lowering()
         n = 0
         for op in self.ops:
             if isinstance(op, Commit):
-                n += 1 if any(len(s.gvas) for s in op.segments) else 0
+                live = sum(1 for s in op.segments if len(s.gvas))
+                n += (1 if hints.fuse_commits else live) if live else 0
             elif isinstance(op, Measure):
                 n += 1 if op.lanes else 0
             elif isinstance(op, (Vote, Validate)):
                 n += op.votes if op.lanes else 0
         return n
+
+    def cost(self, lowering: Optional[PlanLowering] = None, platform=None,
+             n_guests: int = 1):
+        """Predicted execution cost (`repro.core.plancost.plan_cost`):
+        dispatches, padded lane work, compile hits/misses, wall estimate."""
+        from repro.core import plancost
+        return plancost.plan_cost(self, lowering=lowering,
+                                  platform=platform, n_guests=n_guests)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -134,8 +134,8 @@ def run_cachex(platform: Union[str, CachePlatform],
                seed: Optional[int] = None,
                use_batch: Optional[bool] = None, monitor_intervals: int = 3,
                config: Optional[ProbeConfig] = None,
-               host_vm: Optional[Tuple[SimHost, GuestVM]] = None
-               ) -> CacheXReport:
+               host_vm: Optional[Tuple[SimHost, GuestVM]] = None,
+               tune: bool = False) -> CacheXReport:
     """Execute VEV -> VCOL -> VSCAN -> CAS/CAP against one scenario.
 
     All probing routes through one :class:`CacheXSession`; this function
@@ -147,7 +147,10 @@ def run_cachex(platform: Union[str, CachePlatform],
     already-booted pair instead of booting a fresh scenario: the host is
     left clean (the measurement burst this driver attaches is removed
     again, co-tenant enabled states are restored) and the report's cost
-    counters are deltas for this run only."""
+    counters are deltas for this run only.  ``tune=True`` replaces the
+    platform's hinted plan lowering with the autotuner's choice for the
+    session's monitoring plan before any monitoring runs
+    (``CacheXSession.tuned_lowering``; model-only — no cutout timing)."""
     plat = get_platform(platform) if isinstance(platform, str) else platform
     cfg = config if config is not None else ProbeConfig.for_platform(plat)
     overrides = {}
@@ -162,6 +165,8 @@ def run_cachex(platform: Union[str, CachePlatform],
     passes0, accesses0 = vm.stat_passes, vm.stat_accesses
     cotenant_enabled = {wl.name: wl.enabled for wl in host.cotenants}
     session = CacheXSession.attach(vm, plat, cfg)
+    if tune:
+        session.tuned_lowering()
     t0 = time.perf_counter()
 
     # ---- VCOL: color filters + virtual-color accuracy (§3.2) --------------

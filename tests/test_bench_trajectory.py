@@ -1,0 +1,52 @@
+"""BENCH.csv trajectory dedupe (satellite bugfix).
+
+Re-running a PR's bench must *replace* its (pr, metric) rows in place —
+keeping each row's original "before", so the ``before = previous PR's
+after`` chain survives reruns — instead of appending duplicate rows, and
+must leave other PRs' rows untouched.
+"""
+
+import csv
+import json
+
+import benchmarks.common as common
+from benchmarks.run import flush_trajectory
+
+
+def _rows(path):
+    with open(path) as f:
+        return list(csv.reader(f))
+
+
+def test_flush_trajectory_dedupes_on_pr_and_metric(tmp_path, monkeypatch):
+    csv_path = tmp_path / "BENCH.csv"
+    csv_path.write_text(
+        "pr,metric,before,after,notes\n"
+        "4,fleet_matrix_wall_s.x,26.6,29.1,lockstep regression\n")
+
+    monkeypatch.setattr(common, "TRAJECTORY", [
+        {"metric": "fleet_matrix_wall_s.x", "value": 27.0, "notes": "first"},
+        {"metric": "new_metric", "value": 1.0, "notes": "n1"},
+    ])
+    flush_trajectory("6", ["fleet"], 1.0, bench_dir=str(tmp_path))
+    rows = _rows(csv_path)
+    assert rows[0] == ["pr", "metric", "before", "after", "notes"]
+    # a new row chains its "before" from the other PR's latest "after"
+    assert ["6", "fleet_matrix_wall_s.x", "29.1", "27.0", "first"] in rows
+    assert ["6", "new_metric", "", "1.0", "n1"] in rows
+    assert json.load(open(tmp_path / "BENCH_6.json"))["pr"] == "6"
+
+    monkeypatch.setattr(common, "TRAJECTORY", [
+        {"metric": "fleet_matrix_wall_s.x", "value": 25.0, "notes": "rerun"},
+        {"metric": "new_metric", "value": 2.0, "notes": "n2"},
+    ])
+    flush_trajectory("6", ["fleet"], 1.0, bench_dir=str(tmp_path))
+    rows = _rows(csv_path)
+    assert len([r for r in rows if r[0] == "6"]) == 2, \
+        "a rerun must replace its rows, not append duplicates"
+    # replaced in place: original "before" kept, "after"/notes updated
+    assert ["6", "fleet_matrix_wall_s.x", "29.1", "25.0", "rerun"] in rows
+    assert ["6", "new_metric", "", "2.0", "n2"] in rows
+    # other PRs' rows untouched
+    assert ["4", "fleet_matrix_wall_s.x", "26.6", "29.1",
+            "lockstep regression"] in rows

@@ -398,3 +398,76 @@ def test_fleet_without_drift_reports_zero_drift_fields():
                  n_intervals=6, warmup=2).run()
     assert (r.drift_events, r.repairs, r.repair_dispatches,
             r.recovery_max_intervals) == (0, 0, 0, 0)
+
+
+def _drifting_fleet_pair(specs, seq=True):
+    from repro.core.fleet import FleetSim
+    kw = dict(n_intervals=6, warmup=2, seed=0, drift=specs)
+    return [FleetSim(FAST_PLATFORM, policy=p, cap=c, **kw)
+            for p, c in (("cas", "on"), ("eevdf", "on"))]
+
+
+def test_lockstep_keeps_pace_with_geometry_preserving_drift():
+    """Satellite regression: remap (and cotenant) events preserve
+    MachineGeometry, so a drifting fleet must NOT fall back to sequential
+    per-guest execution wholesale — lockstep stays on for every interval,
+    keeping the full shared-dispatch saving, with reports bit-identical
+    to the sequential path."""
+    import dataclasses
+    from repro.core.fleet import _run_lockstep
+    from repro.core.host_model import probe_dispatch_count
+    from repro.core.platforms import DriftSpec
+    specs = (DriftSpec(at_interval=2, kind="remap", fraction=0.2),)
+    assert specs[0].geometry_preserving
+
+    seq_sims = _drifting_fleet_pair(specs)
+    d0 = probe_dispatch_count()
+    seq = [s.run() for s in seq_sims]
+    seq_d = probe_dispatch_count() - d0
+
+    lock_sims = _drifting_fleet_pair(specs)
+    d0 = probe_dispatch_count()
+    lock = _run_lockstep(lock_sims)
+    lock_d = probe_dispatch_count() - d0
+
+    for s, k in zip(seq, lock):
+        for f in dataclasses.fields(type(s)):
+            if f.name in ("dispatches", "wall_s"):
+                continue
+            assert getattr(s, f.name) == getattr(k, f.name), f.name
+    # every plan-routed dispatch is still shared: 4 per guest per interval,
+    # 2 guests x 6 intervals -> lockstep saves exactly 4 x 6 (repair
+    # dispatches run per-guest in both paths and cancel)
+    assert seq_d - lock_d == 24, (seq_d, lock_d)
+
+
+def test_lockstep_falls_back_per_guest_only_where_drift_can_land():
+    """Geometry-changing events (migrate/cat) make multi-guest execution
+    unsafe only for the interval they can land in: that interval runs
+    per-guest, every other interval keeps lockstep — and the reports stay
+    bit-identical to the sequential path."""
+    import dataclasses
+    from repro.core.fleet import _run_lockstep
+    from repro.core.host_model import probe_dispatch_count
+    from repro.core.platforms import DriftSpec
+    specs = (DriftSpec(at_interval=2, kind="migrate", new_slice_seed=5),)
+    assert not specs[0].geometry_preserving
+
+    seq_sims = _drifting_fleet_pair(specs)
+    d0 = probe_dispatch_count()
+    seq = [s.run() for s in seq_sims]
+    seq_d = probe_dispatch_count() - d0
+
+    lock_sims = _drifting_fleet_pair(specs)
+    d0 = probe_dispatch_count()
+    lock = _run_lockstep(lock_sims)
+    lock_d = probe_dispatch_count() - d0
+
+    for s, k in zip(seq, lock):
+        for f in dataclasses.fields(type(s)):
+            if f.name in ("dispatches", "wall_s"):
+                continue
+            assert getattr(s, f.name) == getattr(k, f.name), f.name
+    # 5 of 6 intervals share dispatches (4 saved each); the migrate
+    # interval runs per-guest (0 saved)
+    assert seq_d - lock_d == 20, (seq_d, lock_d)

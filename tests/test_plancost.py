@@ -1,0 +1,268 @@
+"""PlanCost model + measured lowering autotuner tests (bugfix-PR tentpole).
+
+Covers:
+  * dispatch accounting (the headline regression): ``ProbePlan.n_dispatches``
+    and ``plan_cost(...).dispatches`` must equal the physical
+    ``probe_dispatch_count`` delta of actually executing the plan — per
+    platform, and on a non-LRU variant whose ``plan_lowering()`` forces
+    unfused commits (one dispatch per non-empty segment, which is exactly
+    where counting from the *requested* lowering used to go wrong);
+  * padding inertness: ``lane_bucket`` changes kernel shapes only —
+    measured latencies are bit-identical across buckets (LRU and random
+    replacement), which is what makes it a pure cost knob;
+  * compile prediction: a shape is a miss once, across the shape cache and
+    the plan's own dispatch walk; executed dispatches feed the prediction;
+  * the measured autotuner: deterministic chosen lowering + trial cutouts
+    under a fixed seed across repeated forced tunes; cached reuse (a
+    second session attach re-times nothing); milan_ccx's ``lane_bucket=64``
+    wins by *score* — a competitor times faster on the cutout but loses on
+    predicted compile misses, so the choice is neither hardcoded nor
+    argmin-of-measured; tuner cutouts leave no trace in the dispatch
+    counters or the shape cache; model-only tuning reports
+    ``measured=False``, installs a lowering on the session, and never
+    satisfies a later ``measure=True`` request.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import plancost, probeplan
+from repro.core.abstraction import CacheXSession
+from repro.core.host_model import probe_dispatch_count
+from repro.core.plancost import (SHAPE_CACHE, ShapeCache, clear_tune_cache,
+                                 plan_cost, tune_lowering)
+from repro.core.platforms import get_platform, list_platforms
+from repro.core.probeplan import (Commit, Measure, ProbePlan, Segment, Vote,
+                                  WarmTimer)
+from tests.conftest import make_vm
+
+FAST_PLATFORM = "skylake_sp"
+
+
+def _matrix_params():
+    return [name if name == FAST_PLATFORM
+            else pytest.param(name, marks=pytest.mark.slow)
+            for name in list_platforms()]
+
+
+def _rand_platform():
+    """A non-LRU scenario variant (not registered): ``plan_lowering()``
+    forces unfused commits + no lockstep on it."""
+    plat = get_platform(FAST_PLATFORM)
+    return dataclasses.replace(plat, name=plat.name + "_rand",
+                               replacement="random")
+
+
+def _small_vm(plat, seed=3):
+    _, vm = plat.make_host_vm(seed=seed, n_guest_pages=256,
+                              n_host_pages=512, with_noise=False)
+    return vm
+
+
+def _gvas(vm, start, n):
+    return np.array([vm.gva((start + i) % vm.n_guest_pages, 0)
+                     for i in range(n)], np.int64)
+
+
+def _small_plan(vm, hints, empty_segment=False):
+    """Commit(2 live segments) + WarmTimer + Measure + Vote(votes=2) —
+    every dispatch-bearing op kind once."""
+    segs = [Segment(_gvas(vm, 0, 48), 0), Segment(_gvas(vm, 100, 32), 0)]
+    if empty_segment:
+        segs.insert(1, Segment(np.empty(0, np.int64), 0))
+    lanes = tuple(_gvas(vm, 7 * i, 24) for i in range(4))
+    vcpus = (0,) * 4
+    return ProbePlan(ops=(Commit(tuple(segs)), WarmTimer(),
+                          Measure(lanes, vcpus),
+                          Vote(lanes, vcpus, threshold=50, votes=2)),
+                     label="plancost-test", hints=hints)
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting: model == n_dispatches == physical counter delta
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", _matrix_params())
+def test_n_dispatches_matches_execution(name):
+    plat = get_platform(name)
+    vm = _small_vm(plat)
+    plan = _small_plan(vm, plat.plan_lowering())
+    d0 = probe_dispatch_count()
+    probeplan.execute(vm, plan)
+    measured = probe_dispatch_count() - d0
+    assert plan.n_dispatches == measured
+    assert plan_cost(plan, platform=plat).dispatches == measured
+    assert plan.cost(platform=plat).dispatches == measured
+
+
+def test_unfused_commit_counts_per_live_segment():
+    # the regression: under an unfused lowering (what non-LRU
+    # plan_lowering() forces) a Commit is one dispatch per non-empty
+    # segment — n_dispatches must count from the *effective* lowering
+    plat = _rand_platform()
+    vm = _small_vm(plat)
+    hints = plat.plan_lowering()
+    assert not hints.fuse_commits
+    plan = _small_plan(vm, hints, empty_segment=True)
+    d0 = probe_dispatch_count()
+    probeplan.execute(vm, plan)
+    measured = probe_dispatch_count() - d0
+    assert plan.n_dispatches == measured
+    assert plan_cost(plan, platform=plat).dispatches == measured
+    # 2 live segments: unfused costs exactly one extra dispatch vs fused
+    fused = _small_plan(vm, dataclasses.replace(hints, fuse_commits=True),
+                        empty_segment=True)
+    assert plan.n_dispatches == fused.n_dispatches + 1
+
+
+def test_all_empty_commit_is_zero_dispatches():
+    plat = get_platform(FAST_PLATFORM)
+    vm = _small_vm(plat)
+    plan = ProbePlan(ops=(Commit((Segment(np.empty(0, np.int64), 0),)),),
+                     hints=plat.plan_lowering())
+    assert plan.n_dispatches == 0
+    assert plan_cost(plan, platform=plat).dispatches == 0
+    d0 = probe_dispatch_count()
+    probeplan.execute(vm, plan)
+    assert probe_dispatch_count() - d0 == 0
+
+
+# ---------------------------------------------------------------------------
+# lane_bucket is a pure cost knob: padding never changes results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("replacement", ["lru", "random"])
+def test_lane_bucket_padding_is_result_inert(replacement):
+    outs = []
+    for lb in (32, 128):
+        _, vm = make_vm(seed=5, replacement=replacement)
+        lanes = [np.array([vm.gva((13 * i + j) % vm.n_guest_pages, 0)
+                           for j in range(40)], np.int64)
+                 for i in range(6)]
+        out = vm.timed_access_batch(lanes, vcpu=0, lane_bucket=lb)
+        outs.append([np.asarray(o) for o in out])
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# compile prediction
+# ---------------------------------------------------------------------------
+
+def test_plan_cost_compile_prediction():
+    plat = get_platform(FAST_PLATFORM)
+    vm = _small_vm(plat)
+    plan = _small_plan(vm, plat.plan_lowering())
+    cache = ShapeCache()
+    cold = plan_cost(plan, platform=plat, shape_cache=cache)
+    # fused Commit + Measure + 2 Vote rounds; Measure and Vote share one
+    # padded batched shape, so it is one miss + hits within the same walk
+    assert cold.dispatches == 4
+    assert cold.compile_misses == len(set(cold.shapes)) == 2
+    assert cold.compile_hits == cold.dispatches - cold.compile_misses
+    assert cold.dominant == "compile"
+    for kind, shape in cold.shapes:
+        cache.note(kind, plat.machine(), shape)
+    warm = plan_cost(plan, platform=plat, shape_cache=cache)
+    assert warm.compile_misses == 0
+    assert warm.compile_hits == warm.dispatches == 4
+    assert warm.est_wall_s < cold.est_wall_s
+
+
+def test_shape_cache_fed_by_execution():
+    # physically executing a plan registers its padded shapes, so a
+    # re-prediction against the process-wide cache sees only compile hits
+    plat = get_platform(FAST_PLATFORM)
+    vm = _small_vm(plat)
+    plan = _small_plan(vm, plat.plan_lowering())
+    probeplan.execute(vm, plan)
+    after = plan_cost(plan, platform=plat)
+    assert after.compile_misses == 0
+    assert after.compile_hits == after.dispatches
+
+
+# ---------------------------------------------------------------------------
+# the measured autotuner
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def milan_tunes():
+    """Two forced measured tunes of milan_ccx's monitoring plan under one
+    fixed seed (plus the platform and plan, for reuse checks)."""
+    plat = get_platform("milan_ccx")
+    _, vm = plat.make_host_vm(seed=11)
+    session = CacheXSession.attach(vm, plat)
+    plan = session.plan()
+    clear_tune_cache()
+    r1 = tune_lowering(plat, plan, measure=True, force=True)
+    r2 = tune_lowering(plat, plan, measure=True, force=True)
+    return plat, plan, r1, r2
+
+
+def test_tuner_deterministic_under_fixed_seed(milan_tunes):
+    _, _, r1, r2 = milan_tunes
+    assert r1.chosen == r2.chosen
+    assert [(t.knob, t.candidate, t.cutout) for t in r1.trials] == \
+           [(t.knob, t.candidate, t.cutout) for t in r2.trials]
+    assert r1.measured and r2.measured
+    assert not r1.cached and not r2.cached
+    assert all(t.measured_s > 0 for t in r1.trials)
+
+
+def test_milan_lane_bucket_64_is_a_measured_choice(milan_tunes):
+    _, _, r1, _ = milan_tunes
+    assert r1.chosen.lane_bucket == 64
+    lane = [t for t in r1.trials if t.knob == "lane_bucket"]
+    assert len(lane) >= 2
+    (win,) = [t for t in lane if t.chosen]
+    # not argmin-of-measured: some competitor times a *smaller* cutout
+    # faster but loses on predicted compile misses — the scored tradeoff
+    # decides, not a hardcoded platform hint
+    assert any(t.measured_s < win.measured_s
+               for t in lane if not t.chosen)
+    assert win.score <= min(t.score for t in lane if not t.chosen)
+
+
+def test_tuner_cache_reuse_no_retune_on_second_attach(milan_tunes):
+    plat, plan, _, r2 = milan_tunes
+    again = tune_lowering(plat, plan, measure=True)
+    assert again.cached and again.measured
+    assert again.chosen == r2.chosen
+    # a session attached to a fresh VM reuses the cached measured tune
+    _, vm2 = plat.make_host_vm(seed=23)
+    s2 = CacheXSession.attach(vm2, plat)
+    report = s2.tuned_lowering(measure=True)
+    assert report.cached
+    assert s2.config.lowering == r2.chosen
+
+
+def test_tuner_leaves_no_trace(milan_tunes):
+    plat, plan, _, _ = milan_tunes
+    d0, n0 = probe_dispatch_count(), len(SHAPE_CACHE)
+    tune_lowering(plat, plan, measure=True, force=True)
+    assert probe_dispatch_count() == d0
+    assert len(SHAPE_CACHE) == n0
+
+
+def test_model_only_tuning_semantics():
+    plat = get_platform(FAST_PLATFORM)
+    _, vm = plat.make_host_vm(seed=7)
+    session = CacheXSession.attach(vm, plat)
+    snap = dict(plancost._TUNE_CACHE)
+    try:
+        clear_tune_cache()
+        report = session.tuned_lowering()       # measure=False default
+        assert not report.measured and not report.cached
+        assert session.config.lowering == report.chosen
+        assert all(t.measured_s == 0.0 for t in report.trials)
+        # model-only result serves later model-only requests from cache...
+        again = tune_lowering(plat, session.plan(), measure=False)
+        assert again.cached and not again.measured
+        # ...but never satisfies a measured request
+        timed = tune_lowering(plat, session.plan(), measure=True)
+        assert timed.measured and not timed.cached
+    finally:
+        plancost._TUNE_CACHE.clear()
+        plancost._TUNE_CACHE.update(snap)
