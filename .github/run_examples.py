@@ -25,6 +25,7 @@ EXAMPLES = {
     "probe_plans.py": (["skylake_sp"], 420),
     "probe_cloud_sim.py": ([], 420),
     "drift_repair.py": (["skylake_sp"], 420),
+    "attack_defense.py": (["skylake_sp"], 600),
     "fleet_sim.py": (["skylake_sp"], 600),
     "serve_batched.py": ([], 420),
     "train_100m.py": (["--steps", "4", "--ckpt", "/tmp/smoke-ckpt"], 600),

@@ -576,6 +576,120 @@ def bench_tune():
     emit("tune.report_csv", 0.0, f"path={path};rows={len(rows)}")
 
 
+def bench_attack():
+    """Adversarial co-tenancy bench, two halves:
+
+    * detector ROC: record per-window eviction-fraction traces from the
+      real simulator — benign (honest co-tenant load) and attacked
+      (`AttackerGuest` Prime+Probe episodes) — over several seeds, then
+      sweep the CUSUM alarm threshold through `classify_trace` and write
+      the per-platform TPR/FPR curve to bench-attack-roc.csv
+      (acceptance: some threshold reaches TPR >= 0.9 at FPR <= 0.05 on
+      skylake_sp — the shipped default must be one of them);
+    * the closed defense loop: `FleetSim(attack=True)` end to end —
+      detection latency, the CAT way-isolation defense, false-drift
+      count (must be 0: attack != drift) and the sensitive task's
+      quiet-domain residency before / during / after the episode.
+
+    ``ATTACK_PLATFORMS`` (comma-separated) widens the ROC half.
+    """
+    import os
+
+    from repro.core import (AttackerGuest, CacheShield, CacheXSession,
+                            ProbeConfig, get_platform, classify_trace)
+    from repro.core.fleet import FleetSim
+    from repro.core.host_model import polluter_gen as _pgen
+
+    class _Recorder(CacheShield):
+        def __init__(self, out):
+            super().__init__()
+            self.out = out
+
+        def observe(self, snap):
+            self.out.append(np.asarray(snap.eviction_frac, float).copy())
+            return super().observe(snap)
+
+    def record_trace(name, seed, attacked, windows=14):
+        plat = get_platform(name)
+        host, vm = plat.make_host_vm(seed=seed)
+        session = CacheXSession.attach(
+            vm, plat, ProbeConfig.for_platform(plat, seed=seed,
+                                               prune_self_conflicts=True))
+        session.monitored_sets()
+        trace = []
+        session.subscribe_attack(lambda sig: None, shield=_Recorder(trace))
+        host.add_cotenant(CotenantWorkload(
+            "noise", 0,
+            rate_per_ms=0.3 * plat.llc.n_sets * plat.llc.n_slices,
+            gen=_pgen(region_pages=2048)))
+        if attacked:
+            atk = AttackerGuest(host, plat, seed=seed)
+            atk.profile(rounds=2, between=lambda: session.refresh())
+            atk.choose_targets(
+                k=max(1, int(0.34 * len(session.monitored_sets()))))
+        for w in range(windows):
+            if attacked and w == 3:
+                atk.begin()
+            session.refresh()
+        return trace
+
+    platforms = [p for p in os.environ.get(
+        "ATTACK_PLATFORMS", "skylake_sp").split(",") if p]
+    thresholds = (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0)
+    seeds = range(int(os.environ.get("ATTACK_SEEDS", "5")))
+    rows = []
+    for name in platforms:
+        with timer() as t:
+            benign = [record_trace(name, s, attacked=False) for s in seeds]
+            attacked = [record_trace(name, s, attacked=True) for s in seeds]
+        best = None
+        for th in thresholds:
+            tpr = np.mean([classify_trace(tr, threshold=th)["detected"]
+                           for tr in attacked])
+            fpr = np.mean([classify_trace(tr, threshold=th)["detected"]
+                           for tr in benign])
+            rows.append((name, th, f"{tpr:.3f}", f"{fpr:.3f}"))
+            if tpr >= 0.9 and fpr <= 0.05 and best is None:
+                best = (th, tpr, fpr)
+        emit(f"attack.roc_{name}", t["us"],
+             f"seeds={len(list(seeds))};thresholds={len(thresholds)};"
+             + (f"best_threshold={best[0]};tpr={best[1]:.2f};"
+                f"fpr={best[2]:.2f}" if best else "no_threshold_meets_gate"))
+        record(f"attack_roc_tpr.{name}.th2.0",
+               float(np.mean([classify_trace(tr)["detected"]
+                              for tr in attacked])),
+               f"default threshold; fpr="
+               f"{np.mean([classify_trace(tr)['detected'] for tr in benign]):.2f};"
+               f" `--only attack`")
+
+    path = "bench-attack-roc.csv"
+    with open(path, "w") as f:
+        f.write("platform,threshold,tpr,fpr\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    emit("attack.report_csv", 0.0, f"path={path};rows={len(rows)}")
+
+    for name in platforms:
+        with timer() as t:
+            r = FleetSim(name, attack=True, with_poisoner=False,
+                         n_intervals=18).run()
+        emit(f"attack.fleet_defense_{name}", t["us"],
+             f"detected={r.attack_detected};"
+             f"detect_intervals={r.attack_detect_intervals};"
+             f"defenses={r.defenses};false_drift={r.false_drift};"
+             f"residency={r.residency_pre:.2f}/{r.residency_during:.2f}/"
+             f"{r.residency_post:.2f};repairs={r.repairs}")
+        record(f"attack_detect_intervals.{name}",
+               r.attack_detect_intervals,
+               f"defenses={r.defenses}; false_drift={r.false_drift}; "
+               f"residency pre/during/post {r.residency_pre:.2f}/"
+               f"{r.residency_during:.2f}/{r.residency_post:.2f}; "
+               f"`--only attack`")
+        record(f"attack_false_drift.{name}", r.false_drift,
+               "DriftSignals with no host event while attacked (gate: 0); "
+               "`--only attack`")
+
+
 def run_all():
     bench_table2_eviction_construction()
     bench_table3_associativity()
@@ -591,3 +705,4 @@ def run_all():
     bench_plans()
     bench_drift()
     bench_tune()
+    bench_attack()

@@ -104,6 +104,7 @@ def main() -> None:
         ("plans", bench_paper_tables.bench_plans),
         ("drift", bench_paper_tables.bench_drift),
         ("tune", bench_paper_tables.bench_tune),
+        ("attack", bench_paper_tables.bench_attack),
         ("kernels", bench_system.bench_kernels),
         ("train", bench_system.bench_train_step),
         ("serve", bench_system.bench_serve_step),

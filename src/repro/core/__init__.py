@@ -27,7 +27,13 @@ docs/ARCHITECTURE.md):
   color        VCOL — virtual page colors + colored free lists (§3.2);
                validate_page_colors (recolor only what broke)
   vscan        VSCAN — windowed Prime+Probe contention monitoring (§3.3);
-               drift suspicion -> DriftSignal + quarantine
+               drift suspicion -> DriftSignal + quarantine (+ zero-wait
+               clean-confirm un-quarantine)
+  shield       CacheShield — CacheShield-style attack detection over
+               VScanSnapshots (CUSUM burst scoring -> AttackSignal);
+               opt-in via CacheXSession.subscribe_attack
+  attacker     AttackerGuest — adversarial co-tenant running windowed
+               Prime+Probe / Evict+Time through its own CacheXSession
   plancost     analytic ProbePlan cost model (`plan_cost`, the process-wide
                compile-shape cache) + the measured lowering autotuner
                (`tune_lowering`: plan cutouts timed on scratch VMs;
@@ -59,9 +65,13 @@ from repro.core.host_model import (CotenantWorkload, GuestVM, HostEvent,
                                    SimHost, probe_dispatch_count)
 from repro.core.plancost import (PlanCost, TuneReport, clear_tune_cache,
                                  plan_cost, tune_lowering)
-from repro.core.platforms import (CachePlatform, DriftSpec, all_platforms,
-                                  get_platform, list_platforms,
-                                  register_platform)
+from repro.core.attacker import (AttackerGuest, AttackObservation,
+                                 AttackReport, attack_gen)
+from repro.core.platforms import (AttackSpec, CachePlatform, DriftSpec,
+                                  all_platforms, get_platform,
+                                  list_platforms, register_platform)
+from repro.core.shield import (AttackSignal, CacheShield, WindowVerdict,
+                               classify_trace)
 from repro.core.probeplan import PlanLowering, PlanResult, ProbePlan
 from repro.core.runner import (CacheXReport, dataclass_csv_header,
                                dataclass_csv_row, run_cachex, run_matrix)
@@ -69,8 +79,14 @@ from repro.core.vscan import (DriftSignal, MonitoredSet, VScan,
                              theoretical_coverage)
 
 __all__ = [
+    "AttackObservation",
+    "AttackReport",
+    "AttackSignal",
+    "AttackSpec",
+    "AttackerGuest",
     "CachePlatform",
     "CacheXReport",
+    "CacheShield",
     "CacheXSession",
     "CapAllocator",
     "CapStats",
@@ -102,8 +118,11 @@ __all__ = [
     "VEV",
     "VSCAN_POOL_CAP_PAGES",
     "VScan",
+    "WindowVerdict",
     "all_platforms",
     "allow_pull",
+    "attack_gen",
+    "classify_trace",
     "clear_tune_cache",
     "color_accuracy",
     "dataclass_csv_header",

@@ -57,6 +57,7 @@ from repro.core.host_model import GuestVM
 from repro.core.platforms import CachePlatform, get_platform
 from repro.core import probeplan
 from repro.core.probeplan import PlanLowering, PlanResult, ProbePlan
+from repro.core.shield import AttackSignal, CacheShield
 from repro.core.vscan import (DEFAULT_WINDOW_MS, DriftSignal, VScan,
                               VScanSnapshot)
 
@@ -398,6 +399,11 @@ class CacheXSession:
         self._intervals = 0
         self._subs: Dict[int, Callable[[ContentionView], None]] = {}
         self._drift_subs: Dict[int, Callable[[DriftSignal], None]] = {}
+        self._attack_subs: Dict[int, Callable[[AttackSignal], None]] = {}
+        # attack detection is opt-in: the CacheShield is created on first
+        # `subscribe_attack` and never consulted with zero subscribers, so
+        # benign deployments keep bit-identical monitoring behavior
+        self._shield: Optional[CacheShield] = None
         self._next_sub = 0
         # -- drift state ----------------------------------------------------
         # abstraction epoch: bumps on every repair(); stamped on views
@@ -638,6 +644,21 @@ class CacheXSession:
         self._last = view
         for fn in list(self._subs.values()):
             fn(view)
+        # adversarial signal class: the shield classifies each window
+        # BEFORE the drift machinery looks at it — an attack onset
+        # quarantines the attacked sets, which both evicts their garbage
+        # from the aggregates above and keeps their (attack-driven)
+        # suspicion streaks out of the drift path below
+        if self._shield is not None and self._attack_subs:
+            verdict = self._shield.observe(snap)
+            if verdict.onset is not None:
+                self._vs.flag_sets(verdict.onset.set_indices, attack=True)
+                for fn in list(self._attack_subs.values()):
+                    fn(verdict.onset)
+            elif verdict.cleared:
+                # attacker went quiet: a zero-wait clean-confirm
+                # (2 dispatches) un-quarantines the intact sets
+                self._vs.confirm_clean()
         # sustained probe anomalies surface as an explicit DriftSignal:
         # when suspicion streaks mature, a zero-wait confirmation (2
         # dispatches, contention-proof) either quarantines the broken sets
@@ -677,9 +698,37 @@ class CacheXSession:
         self._drift_subs[sid] = fn
         return sid
 
+    def subscribe_attack(self, fn: Callable[[AttackSignal], None],
+                         shield: Optional[CacheShield] = None) -> int:
+        """Register an attack consumer; called with every
+        :class:`~repro.core.shield.AttackSignal` onset (sustained
+        Prime+Probe-shaped interference).  The first subscription
+        activates the session's :class:`CacheShield` (pass ``shield`` to
+        supply tuned parameters); with no subscribers the shield never
+        runs, so attack detection costs nothing unless asked for.
+        Shares the token namespace with :meth:`subscribe` /
+        :meth:`unsubscribe`."""
+        if shield is not None:
+            self._shield = shield
+        elif self._shield is None:
+            self._shield = CacheShield(
+                len(self._vs.monitored) if self._vs is not None else 0)
+        sid = self._next_sub
+        self._next_sub += 1
+        self._attack_subs[sid] = fn
+        return sid
+
+    @property
+    def shield(self) -> Optional[CacheShield]:
+        """The active detector (None until `subscribe_attack`) — exposes
+        live attack state (``under_attack``, ``attacked``, ``signals``)
+        to closed-loop consumers like the fleet's defense policy."""
+        return self._shield
+
     def unsubscribe(self, token: int) -> None:
         self._subs.pop(token, None)
         self._drift_subs.pop(token, None)
+        self._attack_subs.pop(token, None)
 
     # -- drift: guest-side check & incremental repair ------------------------
     def check_drift(self) -> Dict:
@@ -704,7 +753,9 @@ class CacheXSession:
             mon = self._vs.monitored
             mv = vev.validate_sets([m.es for m in mon], "llc",
                                    vcpus=[m.vcpu for m in mon])
-            mv &= ~self._vs.flagged        # quarantined = broken until fixed
+            # drift quarantine = broken until fixed; attack quarantine is
+            # interference over an intact set — not a validity defect
+            mv &= ~(self._vs.flagged & ~self._vs.attack_flagged)
             out["vscan_valid"] = mv
             out["any_broken"] |= bool((~mv).any())
         return out
@@ -747,7 +798,11 @@ class CacheXSession:
         if self._vs is not None:
             mvalid = vev.validate_sets([m.es for m in mon], "llc",
                                        vcpus=mon_vcpus)
-            mvalid &= ~self._vs.flagged    # quarantined = broken until fixed
+            # drift-quarantined sets count as broken (rebuild lifts the
+            # flag); attack-quarantined sets are intact — rebuilding them
+            # would let an attacker force arbitrarily expensive repairs.
+            # They stay flagged until `VScan.confirm_clean` clears them.
+            mvalid &= ~(self._vs.flagged & ~self._vs.attack_flagged)
 
         # -- capacity re-detection --------------------------------------------
         # Triggered by a DriftSignal (a CAT *shrink* self-conflicts), or by

@@ -61,12 +61,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.abstraction import CacheXSession, ProbeConfig
+from repro.core.attacker import AttackerGuest
 from repro.core.cachesim import BLOCKS_PER_PAGE, LAT_L2
 from repro.core.cap import CapAllocator
 from repro.core.cas import TierTracker, policy_place
-from repro.core.host_model import (CotenantWorkload, congruent_gen,
-                                   polluter_gen)
-from repro.core.platforms import CachePlatform, DriftSpec, get_platform
+from repro.core.host_model import (CotenantWorkload, HostEvent,
+                                   congruent_gen, polluter_gen)
+from repro.core.platforms import (AttackSpec, CachePlatform, DriftSpec,
+                                  get_platform)
 from repro.core import probeplan
 from repro.core.probeplan import (Commit, Measure, ProbePlan, Segment,
                                   WarmTimer)
@@ -178,6 +180,16 @@ class FleetReport:
                          accounting: host events that fired, repair passes
                          that actually fixed something, and the probe
                          dispatches all repair passes cost.
+    ``attack_*``/``defenses``/``false_drift``/``residency_*``
+                         adversarial-scenario accounting (attack runs
+                         only): attacker-active intervals, whether the
+                         shield detected, intervals from attack start to
+                         detection, defensive CAT isolations scheduled,
+                         DriftSignals raised while the attack ran with no
+                         host event or defense to explain them (must be
+                         0 — attack is not drift), and the sensitive
+                         task's quiet-domain residency before / during /
+                         after the attack+defense episode.
     ``recovery_max_intervals``  worst-case intervals from a host event
                          until the *measured* per-domain ranking again
                          identified the polluted domain (and, under CAS,
@@ -208,6 +220,14 @@ class FleetReport:
     repairs: int = 0
     repair_dispatches: int = 0
     recovery_max_intervals: int = 0
+    attack_windows: int = 0
+    attack_detected: bool = False
+    attack_detect_intervals: int = -1
+    defenses: int = 0
+    false_drift: int = 0
+    residency_pre: float = 0.0
+    residency_during: float = 0.0
+    residency_post: float = 0.0
 
     @classmethod
     def csv_header(cls) -> str:
@@ -230,7 +250,9 @@ class FleetSim:
                  ticks_per_interval: int = 32, stream_len: int = 192,
                  ws_pages: int = 8, thresholds: Sequence[float] = (1.0, 4.0),
                  drift: Union[bool, Sequence[DriftSpec]] = False,
-                 repair_on_drift: bool = True, revalidate_every: int = 4):
+                 repair_on_drift: bool = True, revalidate_every: int = 4,
+                 attack: Union[bool, AttackSpec] = False,
+                 defend: bool = True, with_poisoner: bool = True):
         if policy not in FLEET_POLICIES:
             raise ValueError(f"policy must be one of {FLEET_POLICIES}")
         plat0 = get_platform(platform) if isinstance(platform, str) else platform
@@ -299,7 +321,32 @@ class FleetSim:
         self.stat_repairs = 0
         self.stat_repair_dispatches = 0
         self._recoveries: List[int] = []
-        if self.drift_specs and self.repair_on_drift:
+
+        # -- adversarial scenario: attacker guest + shield + defense --------
+        # attack=True uses the platform's AttackSpec; defense (on by
+        # default) schedules the CAT way isolation on sustained detection.
+        self.attack_spec: Optional[AttackSpec] = (
+            plat0.attack if attack is True
+            else (attack if isinstance(attack, AttackSpec) else None))
+        self.defend = defend
+        self.with_poisoner = with_poisoner
+        self.attacker: Optional[AttackerGuest] = None
+        self._attack_activity: Optional[np.ndarray] = None
+        self._cur_interval = -1
+        self._under_attack_intervals = 0
+        self._defended = False
+        self._defended_at: Optional[int] = None
+        self.stat_attack_windows = 0
+        self.stat_defenses = 0
+        self.stat_false_drift = 0
+        self._detect_interval = -1
+        self._resid_hist: List[Tuple[int, int]] = []   # (interval, in_quiet)
+        if self.attack_spec is not None:
+            self.attacker = AttackerGuest(self.host, self.plat, seed=seed)
+            self.session.subscribe_attack(self._on_attack_signal)
+
+        if ((self.drift_specs or self.attack_spec is not None)
+                and self.repair_on_drift):
             self.session.subscribe_drift(self._on_drift_signal)
 
         # -- asymmetric contention (Fig 10): pollute domain 0 ---------------
@@ -401,7 +448,13 @@ class FleetSim:
         self.vanilla_order = mixed[:self.stream_len]
 
         # congruent-set poisoner: saturates P's offset-0 monitored rows in
-        # the polluted domain so the measured per-color ranking stays put
+        # the polluted domain so the measured per-color ranking stays put.
+        # Skipped for adversarial scenarios (with_poisoner=False): the
+        # poisoner is physically attack-shaped — concentrated congruent
+        # whole-set traffic — and would both trip the shield and inflate
+        # its burst baseline.
+        if not self.with_poisoner:
+            return
         rows = self._rows_of_true_color(truths[self.stream_color])
         target_sets = [r * BLOCKS_PER_PAGE for r in rows]
         n_cells = max(1, len(rows) * self.plat.llc.n_slices)
@@ -415,8 +468,25 @@ class FleetSim:
     def _on_drift_signal(self, sig) -> None:
         """`subscribe_drift` hook: queue a repair for the next interval
         (the signal arrives mid-publish; repairing inline would race the
-        consumers of the same view)."""
+        consumers of the same view).
+
+        Adversarial accounting: a DriftSignal raised while the attack
+        stream is live and *no* host event is in flight has nothing real
+        behind it — the only cache-state change is the attacker's priming,
+        so it is the attack masquerading as drift.  The shield exists to
+        keep this count at zero (attack != drift)."""
+        if (self.attacker is not None and self.attacker.active
+                and not self._outstanding):
+            self.stat_false_drift += 1
         self._repair_pending = True
+
+    def _on_attack_signal(self, sig) -> None:
+        """`subscribe_attack` hook: record detection latency (intervals
+        from attack start to the first AttackSignal).  The defense itself
+        runs from the loop (`_maybe_defend`) once detection *sustains*."""
+        if self._detect_interval < 0 and self.attack_spec is not None:
+            self._detect_interval = max(
+                0, self._cur_interval - self.attack_spec.start_interval)
 
     def _schedule_due_events(self, interval: int) -> None:
         """Materialize this interval's DriftSpecs on the host timeline,
@@ -435,7 +505,8 @@ class FleetSim:
         """Repair-on-signal plus the periodic validation cadence (silent
         remaps never self-conflict, so signals alone cannot catch them —
         this is the 'vSCAN monitors continuously' production posture)."""
-        if not (self.drift_specs and self.repair_on_drift):
+        if not ((self.drift_specs or self.attack_spec is not None)
+                and self.repair_on_drift):
             return
         due = (self._repair_pending
                or (self.revalidate_every
@@ -451,6 +522,94 @@ class FleetSim:
             if rep.pages_recolored or rep.filters_rebuilt:
                 # CAP's buckets reflect the old colors: re-sync them
                 self.cap.rebucket(self.session.colors().known_pages())
+
+    # ----------------------------------------------------------- attack
+    def _maybe_defend(self, interval: int) -> None:
+        """Defense policy: once the shield reports *sustained* attack
+        (``defend_after`` consecutive intervals), schedule a ``cat`` host
+        event shrinking the guest-effective ways to ``isolate_ways`` —
+        the CAT re-carve that takes the victim's ways out of the
+        attacker's reach — and silence the attack stream (its evictions
+        no longer land).  The way change is a genuine geometry change, so
+        it flows through the normal drift path: DriftSignal → repair →
+        CAP rebucket, and `_note_recovery` closes the episode when the
+        measured ranking steers correctly again."""
+        spec, atk = self.attack_spec, self.attacker
+        if spec is None or atk is None or not self.defend or self._defended:
+            return
+        shield = self.session.shield
+        if shield is not None and shield.under_attack:
+            self._under_attack_intervals += 1
+        else:
+            self._under_attack_intervals = 0
+        if self._under_attack_intervals < spec.defend_after:
+            return
+        at = self.host.time_ms + 0.5 * self.session._vs.window_ms
+        self.host.schedule_event(HostEvent(
+            at_ms=at, kind="cat", new_llc_ways=spec.isolate_ways,
+            note="defense: CAT way isolation"))
+        # the re-carve is geometry-changing: this interval must execute
+        # per guest in lockstep mode (same rule as cat/migrate DriftSpecs)
+        self._seq_only_intervals.add(interval)
+        atk.stop()
+        self._outstanding.append((interval, "defense"))
+        self._defended = True
+        self._defended_at = interval
+        self.stat_defenses += 1
+
+    def _attack_pre(self, k: int) -> bool:
+        """Attack lifecycle ahead of interval ``k``'s monitor probe:
+        profiling primes (the victim's own priming overwrites them — the
+        measurement happens in `_attack_post`), and the attack stream's
+        begin/stop edges.  Returns True on profiling intervals."""
+        spec, atk = self.attack_spec, self.attacker
+        if spec is None or atk is None:
+            return False
+        profiling = (spec.start_interval - spec.profile_intervals
+                     <= k < spec.start_interval)
+        if profiling:
+            atk.prime(list(range(len(atk._sets()))))
+        if k == spec.start_interval and not self._defended:
+            if not atk.targets:
+                atk.choose_targets(k=spec.n_targets, domain=spec.domain)
+            blocks = atk.target_blocks()
+            atk.begin(rate_per_ms=spec.rate_factor * len(blocks),
+                      domain=spec.domain)
+        if k == spec.stop_interval and atk.active:
+            atk.stop()
+        if atk.active:
+            self.stat_attack_windows += 1
+        return profiling
+
+    def _attack_post(self, k: int) -> None:
+        """Profiling probe after the victim's window: accumulate per-cell
+        victim activity; pick the attack targets on the last profiling
+        interval (most-active cells in the target domain)."""
+        spec, atk = self.attack_spec, self.attacker
+        idxs = list(range(len(atk._sets())))
+        frac = atk.probe(idxs)
+        self._attack_activity = (frac if self._attack_activity is None
+                                 else self._attack_activity + frac)
+        if k == spec.start_interval - 1:
+            atk.activity = (self._attack_activity
+                            / max(1, spec.profile_intervals))
+            atk.choose_targets(k=spec.n_targets, domain=spec.domain)
+
+    def _residency_phases(self) -> Tuple[float, float, float]:
+        """Quiet-domain residency of the sensitive task before / during /
+        after the attack+defense episode (post-warmup intervals only for
+        the pre phase; the episode ends at the defense, or at the attack's
+        stop/run end when undefended)."""
+        if self.attack_spec is None or not self._resid_hist:
+            return (0.0, 0.0, 0.0)
+        start = self.attack_spec.start_interval
+        end = (self._defended_at if self._defended_at is not None
+               else min(self.attack_spec.stop_interval, self.n_intervals))
+        pre = [q for k, q in self._resid_hist if self.warmup <= k < start]
+        dur = [q for k, q in self._resid_hist if start <= k <= end]
+        post = [q for k, q in self._resid_hist if k > end]
+        return tuple(float(np.mean(p)) if p else 0.0
+                     for p in (pre, dur, post))
 
     def _note_recovery(self, interval: int,
                        dom_rates: Dict[int, float]) -> None:
@@ -471,7 +630,7 @@ class FleetSim:
             self._outstanding.clear()
 
     def _recovery_max(self) -> int:
-        if not self.drift_specs:
+        if not (self.drift_specs or self.stat_defenses):
             return 0
         if self._outstanding:
             return -1            # never re-converged before the run ended
@@ -537,8 +696,13 @@ class FleetSim:
             # drift scenario: host events land mid-window; repairs run
             # before the probe so this interval measures with a (possibly
             # just-)repaired abstraction
+            self._cur_interval = k
             self._schedule_due_events(k)
             self._maybe_repair(k)
+            # adversarial scenario: defend on sustained detection, then
+            # the attack lifecycle edges (profiling primes, begin/stop)
+            self._maybe_defend(k)
+            profiling = self._attack_pre(k)
             # act (from last interval's decision): route each workload's
             # traffic into its current domain
             for task in tasks:
@@ -556,6 +720,8 @@ class FleetSim:
             else:
                 view = self.session.refresh()
             dom_rates = view.per_domain
+            if profiling:
+                self._attack_post(k)
             # act: policy placement (wakeup order randomized per interval)
             free = set(vcpus)
             for ti in self.rng.permutation(len(tasks)):
@@ -609,6 +775,9 @@ class FleetSim:
             for t_, p in zip(tasks, prog):
                 t_.done_work += float(p)
             self._note_recovery(k, dom_rates)
+            self._resid_hist.append(
+                (k, int(self.vcpu_domain[self._sens.vcpu]
+                        != POLLUTED_DOMAIN)))
             if k >= self.warmup:
                 scored += 1
                 # any unpolluted domain counts as quiet (>2-domain views)
@@ -642,6 +811,14 @@ class FleetSim:
             repairs=self.stat_repairs,
             repair_dispatches=self.stat_repair_dispatches,
             recovery_max_intervals=self._recovery_max(),
+            attack_windows=self.stat_attack_windows,
+            attack_detected=self._detect_interval >= 0,
+            attack_detect_intervals=self._detect_interval,
+            defenses=self.stat_defenses,
+            false_drift=self.stat_false_drift,
+            residency_pre=(resid := self._residency_phases())[0],
+            residency_during=resid[1],
+            residency_post=resid[2],
         )
 
 

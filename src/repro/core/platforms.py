@@ -101,6 +101,34 @@ class DriftSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """A platform's default adversarial-co-tenancy scenario.
+
+    Consumed by ``FleetSim(attack=True)`` (and ``benchmarks --only
+    attack``): a Prime+Probe `~repro.core.attacker.AttackerGuest` boots
+    on the victim's host, profiles for ``profile_intervals`` monitoring
+    intervals, then streams priming traffic at ``rate_factor`` accesses
+    per target line per ms over ``n_targets`` sets in LLC ``domain``
+    (default 1 = the fleet's quiet domain, where the sensitive task
+    lives) from interval ``start_interval`` until ``stop_interval`` or
+    until the defense ends it.  On ``defend_after`` consecutive
+    under-attack intervals the fleet's defense schedules a ``cat``
+    `HostEvent` shrinking the guest allocation to ``isolate_ways`` —
+    Sprabery-et-al-style way isolation: the attacker's evictions can no
+    longer reach the victim's ways, traded against capacity.
+    """
+
+    start_interval: int = 5
+    stop_interval: int = 10 ** 6        # "until defended"
+    profile_intervals: int = 2
+    n_targets: int = 4
+    rate_factor: float = 12.0
+    domain: int = 1
+    defend_after: int = 2
+    isolate_ways: int = 6
+
+
+@dataclasses.dataclass(frozen=True)
 class CachePlatform:
     """One provisioned-cache scenario a cloud VM may land on.
 
@@ -144,6 +172,12 @@ class CachePlatform:
                          non-lockstep execution on non-LRU replacement
                          where fused trials would not replay the
                          sequential path bit for bit.
+    ``attack``           the platform's default adversarial scenario
+                         (:class:`AttackSpec`): when the attack starts,
+                         how concentrated it is, and how many ways the
+                         defensive CAT isolation leaves the guest.
+                         Consumed by ``FleetSim(attack=True)`` and
+                         ``benchmarks --only attack``.
     ``drift``            the platform's default drift scenario: the
                          :class:`DriftSpec` host events a long-running
                          deployment on this provisioning would plausibly
@@ -170,6 +204,7 @@ class CachePlatform:
     prime_reps: int = 1
     lowering: Optional[PlanLowering] = None
     drift: Tuple[DriftSpec, ...] = ()
+    attack: AttackSpec = AttackSpec()
 
     def __post_init__(self):
         if self.llc_ways_total == 0:
@@ -305,6 +340,7 @@ ICELAKE_SP = register_platform(CachePlatform(
     llc=CacheGeometry(n_sets=256, n_ways=12, n_slices=1),
     drift=(DriftSpec(at_interval=5, kind="remap", fraction=0.2),
            DriftSpec(at_interval=7, kind="migrate")),
+    attack=AttackSpec(isolate_ways=9),
 ))
 
 # Milan-like: small CCX LLC domains (several per socket), non-sliced,
@@ -320,6 +356,7 @@ MILAN_CCX = register_platform(CachePlatform(
     lowering=PlanLowering(lane_bucket=64),
     drift=(DriftSpec(at_interval=5, kind="remap", fraction=0.25,
                      note="NUMA balancing rebacks a quarter of the guest"),),
+    attack=AttackSpec(isolate_ways=12),
 ))
 
 # CAT way-partitioned Skylake: the hypervisor allocates 4 of 8 ways to this
@@ -335,6 +372,7 @@ SKYLAKE_CAT = register_platform(CachePlatform(
     drift=(DriftSpec(at_interval=5, kind="cat", new_llc_ways=6,
                      note="runtime CAT repartition grants 2 more ways"),
            DriftSpec(at_interval=7, kind="remap", fraction=0.15)),
+    attack=AttackSpec(isolate_ways=3),
 ))
 
 # Slice-partitioned: the guest's pages only ever land in one of the two

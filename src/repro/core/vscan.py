@@ -128,6 +128,11 @@ class VScan:
         self.drift_intervals = drift_intervals
         self._suspect = np.zeros(len(monitored), np.int64)
         self.flagged = np.zeros(len(monitored), bool)
+        # subset of `flagged` quarantined for *interference* (an attack
+        # episode), not structural damage: excluded from aggregates like
+        # any quarantine, but NOT treated as broken by repair — the
+        # un-quarantine path is `confirm_clean`, not a rebuild
+        self.attack_flagged = np.zeros(len(monitored), bool)
         # intervals to wait before re-running a (failed) drift confirmation
         # — legitimate heavy contention keeps suspicion streaks alive, and
         # the cooldown bounds the zero-wait re-checks it can trigger
@@ -378,9 +383,27 @@ class VScan:
             self.ewma = self.ewma[keep]
             self._suspect = self._suspect[keep]
             self.flagged = self.flagged[keep]
+            self.attack_flagged = self.attack_flagged[keep]
         return dropped
 
     # -- drift detection (suspects → zero-wait confirm → quarantine) -----------
+    def _zero_wait_frac(self, label: str) -> np.ndarray:
+        """Zero-wait prime→probe over every monitored set (2 dispatches).
+
+        The contention-proof arbiter shared by `confirm_drift` and
+        `confirm_clean`: host time only advances inside Wait ops, so
+        co-tenants — including an adversarial Prime+Probe guest — emit
+        nothing between the prime Commit and the timed Measure.  Any
+        eviction it sees is self-inflicted, i.e. structural."""
+        by_prober = self._by_prober()
+        if self.use_batch and self.use_plans:
+            ops, order = self._interval_ops(by_prober, window_ms=None)
+            plan = ProbePlan(ops=ops, label=label, hints=self.lowering)
+            return self._frac_from_lanes(
+                order, probeplan.execute(self.vm, plan).last)
+        self._prime(by_prober)
+        return self._probe(by_prober)
+
     def drift_suspects(self) -> np.ndarray:
         """Indices of live monitored sets whose anomaly streak reached
         ``drift_intervals`` (candidates for :meth:`confirm_drift`)."""
@@ -402,18 +425,14 @@ class VScan:
                                   & ~self.flagged)
         if not len(suspects):
             return None
-        by_prober = self._by_prober()
-        if self.use_batch and self.use_plans:
-            ops, order = self._interval_ops(by_prober, window_ms=None)
-            plan = ProbePlan(ops=ops, label="vscan.confirm",
-                             hints=self.lowering)
-            frac = self._frac_from_lanes(
-                order, probeplan.execute(self.vm, plan).last)
-        else:
-            self._prime(by_prober)
-            frac = self._probe(by_prober)
+        frac = self._zero_wait_frac("vscan.confirm")
         confirmed = np.flatnonzero((frac >= self.drift_frac)
                                    & ~self.flagged)
+        # opportunistic un-quarantine: the same zero-wait probe measured
+        # every flagged set for free — any that came back clean is
+        # structurally intact (quarantined for interference, e.g. an
+        # attack episode, not for damage) and rejoins the live population
+        self._unflag_clean(frac)
         self._suspect[:] = 0
         if not len(confirmed):
             self._confirm_cooldown = 4 * self.drift_intervals
@@ -425,11 +444,46 @@ class VScan:
                            time_ms=self.vm.host.time_ms,
                            intervals=self.drift_intervals)
 
-    def flag_sets(self, indices: Sequence[int]) -> None:
+    def flag_sets(self, indices: Sequence[int], attack: bool = False) -> None:
         """Quarantine monitored sets found broken by an external check
-        (e.g. `VEV.validate_sets` during `CacheXSession.repair`)."""
+        (e.g. `VEV.validate_sets` during `CacheXSession.repair`) or — with
+        ``attack=True`` — poisoned by one (`CacheShield` attack onset).
+        Attack quarantine excludes the sets from aggregates the same way,
+        but marks them intact: repair skips them (nothing to rebuild) and
+        `confirm_clean` lifts the flag once the attacker goes quiet."""
         for i in indices:
             self.flagged[int(i)] = True
+            if attack:
+                self.attack_flagged[int(i)] = True
+
+    def _unflag_clean(self, frac: np.ndarray) -> Tuple[int, ...]:
+        """Un-quarantine flagged sets whose zero-wait eviction fraction is
+        below ``drift_frac``: structurally intact, safe to re-live."""
+        clean = np.flatnonzero(self.flagged & (frac < self.drift_frac))
+        for i in clean:
+            self.flagged[i] = False
+            self.attack_flagged[i] = False
+            self._suspect[i] = 0
+            self.ewma[i] = 0.0   # quarantine-era rate described interference
+        return tuple(int(i) for i in clean)
+
+    def confirm_clean(self) -> Tuple[int, ...]:
+        """Zero-wait re-check of quarantined sets; un-flags the intact ones.
+
+        Historically `flagged` was one-way outside of repair: only
+        `replace_set` (a rebuild) cleared it.  That is right for
+        drift-confirmed sets — they really are broken — but wrong for
+        sets quarantined because of *interference*: a set flagged during
+        a sustained attack episode is structurally fine, and without this
+        check it stayed quarantined forever after the attacker stopped,
+        permanently shrinking the live monitor population (and, next
+        repair, getting pointlessly rebuilt).  Costs 2 dispatches; a
+        still-broken set (e.g. CAT capacity loss) still self-conflicts
+        zero-wait and stays flagged.  Returns the un-flagged indices."""
+        if not self.flagged.any() or not self.monitored:
+            return ()
+        frac = self._zero_wait_frac("vscan.clean")
+        return self._unflag_clean(frac)
 
     def replace_set(self, index: int, es) -> None:
         """Swap in a repaired eviction set and bring the slot back live:
@@ -437,6 +491,7 @@ class VScan:
         from scratch — its old rate history described different lines)."""
         self.monitored[index].es = es
         self.flagged[index] = False
+        self.attack_flagged[index] = False
         self._suspect[index] = 0
         self.ewma[index] = 0.0
 
