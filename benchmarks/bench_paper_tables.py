@@ -23,6 +23,9 @@ tune     — ProbePlan cost model + lowering autotuner: model-vs-measured
            dispatch counts per platform, cold measured tune vs cached
            re-tune, and the per-knob cutout trial table; writes
            bench-tune-lowering.csv
+hierarchy — per-level (L2/LLC/DRAM) attribution vs the hypercall oracle
+           on both inclusion variants + the CAP L2-harvest fleet loop
+           (residual ws latency on vs off); writes bench-hierarchy.csv
 """
 
 from __future__ import annotations
@@ -690,6 +693,86 @@ def bench_attack():
                "`--only attack`")
 
 
+def bench_hierarchy():
+    """Multi-level hierarchy bench, two halves:
+
+    * per-level attribution: on each platform (both inclusion variants),
+      probe a mixed-residency working set one uncommitted lane per line
+      and score the L2/LLC/DRAM classification against the
+      `hypercall_resident_level` oracle (acceptance: accuracy 1.0 — the
+      §6.2-style validation of the per-level thresholds);
+    * the L2-harvest loop: `FleetSim(harvest="on"/"off")` on skylake_sp —
+      a targeted co-tenant thrashes the sensitive task's private-L2
+      working set, and with harvest on CAP's `L2HarvestTier` promotes it
+      into a measured-quiet sibling L2 (acceptance: residual working-set
+      latency improves on-vs-off, throughput does not regress).
+
+    ``HIERARCHY_PLATFORMS`` (comma-separated) widens the attribution
+    half.  Writes bench-hierarchy.csv.
+    """
+    import dataclasses
+    import os
+
+    from repro.core import get_platform
+    from repro.core.fleet import harvest_summary, run_fleet
+    from repro.core.hierarchy import attribution_accuracy
+
+    platforms = [p for p in os.environ.get(
+        "HIERARCHY_PLATFORMS", "skylake_sp,milan_ccx").split(",") if p]
+    rows = []
+    for name in platforms:
+        native = get_platform(name).inclusion
+        for inclusion in ("inclusive", "non_inclusive"):
+            plat = get_platform(name)
+            if plat.inclusion != inclusion:
+                plat = dataclasses.replace(plat, inclusion=inclusion)
+            host, vm = plat.make_host_vm(seed=7, with_noise=False)
+            pages = vm.alloc_pages(96)
+            gvas = [vm.gva(int(p), 0) for p in pages]
+            vm.access(np.asarray(gvas[:64]))
+            with timer() as t:
+                acc = attribution_accuracy(vm, gvas)
+            emit(f"hierarchy.attribution_{name}_{inclusion}", t["us"],
+                 f"accuracy={acc:.3f};lines={len(gvas)};target=1.0")
+            rows.append((name, inclusion, "attribution", f"{acc:.3f}",
+                         "", "", ""))
+            if inclusion == native:
+                record(f"hierarchy_attribution_accuracy.{name}", acc,
+                       "probe-classified residency vs hypercall oracle "
+                       f"({len(gvas)} mixed-residency lines); "
+                       "`--only hierarchy`")
+
+    reports = {h: run_fleet("skylake_sp", policy="cas", cap="on", seed=0,
+                            harvest=h)
+               for h in ("on", "off")}
+    row = harvest_summary(list(reports.values()))["skylake_sp"]
+    emit("hierarchy.harvest_skylake_sp", 0.0,
+         f"ws_lat_on={row['ws_lat_on']:.1f};"
+         f"ws_lat_off={row['ws_lat_off']:.1f};"
+         f"lat_improvement={row['lat_improvement']:.3f};"
+         f"throughput_delta={row['throughput_delta']:.3f};"
+         f"grants={reports['on'].harvest_grants};"
+         f"intervals={row['harvest_intervals']:.0f};target=lat>0")
+    record("harvest_lat_improvement.skylake_sp",
+           round(row["lat_improvement"], 3),
+           f"residual ws latency {row['ws_lat_off']:.1f}->"
+           f"{row['ws_lat_on']:.1f} cycles with the L2 tier on; "
+           f"throughput delta {row['throughput_delta']:+.3f}; "
+           "`--only hierarchy`")
+    rows.append(("skylake_sp", "inclusive", "harvest",
+                 f"{row['lat_improvement']:.3f}",
+                 f"{row['ws_lat_on']:.1f}", f"{row['ws_lat_off']:.1f}",
+                 f"{row['throughput_delta']:.3f}"))
+
+    path = "bench-hierarchy.csv"
+    with open(path, "w") as f:
+        f.write("platform,inclusion,mode,accuracy_or_improvement,"
+                "ws_lat_on,ws_lat_off,throughput_delta\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    emit("hierarchy.report_csv", 0.0, f"path={path};rows={len(rows)}")
+
+
 def run_all():
     bench_table2_eviction_construction()
     bench_table3_associativity()
@@ -706,3 +789,4 @@ def run_all():
     bench_drift()
     bench_tune()
     bench_attack()
+    bench_hierarchy()

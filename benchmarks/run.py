@@ -105,6 +105,7 @@ def main() -> None:
         ("drift", bench_paper_tables.bench_drift),
         ("tune", bench_paper_tables.bench_tune),
         ("attack", bench_paper_tables.bench_attack),
+        ("hierarchy", bench_paper_tables.bench_hierarchy),
         ("kernels", bench_system.bench_kernels),
         ("train", bench_system.bench_train_step),
         ("serve", bench_system.bench_serve_step),

@@ -19,9 +19,14 @@ docs/ARCHITECTURE.md):
                probing code may touch) + canned co-tenant traffic generators
   platforms    CachePlatform registry: the cloud-provisioning scenario matrix
   probeplan    ProbePlan — the declarative probe IR (Commit/Wait/Measure/
-               Vote/Validate ops) + the one executor (`execute`,
-               guest-vectorized `execute_many`, `fuse`) every batched
-               probe lowers through
+               Vote/Validate ops, each carrying a cache level) + the one
+               executor (`execute`, guest-vectorized `execute_many`,
+               `fuse`) every batched probe lowers through
+  hierarchy    the two-level L2+LLC model: HierarchySpec (inclusion
+               variants + their consequences: back-invalidation,
+               directory aliasing, filter reliability), per-level probe
+               attribution vs the residency oracle, and the quiet-L2
+               harvest helpers CAP's L2 tier ranks capacity with
   eviction     VEV — minimal eviction sets + associativity (§3.1);
                spare-carrying sets, validate_sets/repair_sets drift repair
   color        VCOL — virtual page colors + colored free lists (§3.2);
@@ -43,7 +48,9 @@ docs/ARCHITECTURE.md):
                epoch-stamped export/import + check_drift/repair +
                tuned_lowering)
   cas          CAS — contention tiers + placement policies (§4.1)
-  cap          CAP — color-aware page-cache allocation (§4.2)
+  cap          CAP — color-aware page-cache allocation (§4.2) + the
+               L2HarvestTier promoting hot pages into measured-quiet
+               private-L2 capacity
   runner       run_cachex: one-shot report-builder over a session
   fleet        closed-loop fleet simulator: probe→decide→act→measure
                (Fig 10 / Tables 7-8 analogs via `run_fleet_matrix`)
@@ -53,14 +60,19 @@ from repro.core.abstraction import (CacheXSession, ColorsView,
                                     ContentionView, ProbeConfig,
                                     RepairReport, StaleAbstractionError,
                                     TopologyView, VSCAN_POOL_CAP_PAGES)
-from repro.core.cap import CapAllocator, CapStats
+from repro.core.cap import (CapAllocator, CapStats, HarvestStats,
+                            L2HarvestTier)
 from repro.core.cas import (TierTracker, allow_pull, policy_place,
                             select_vcpu)
 from repro.core.color import VCOL, ColorFilters, color_accuracy
 from repro.core.eviction import VEV, EvictionSet
 from repro.core.fleet import (FleetReport, FleetSim, FleetWorkload,
-                              fig10_summary, run_fleet, run_fleet_matrix,
-                              speedup_summary)
+                              fig10_summary, harvest_summary, run_fleet,
+                              run_fleet_matrix, speedup_summary)
+from repro.core.hierarchy import (HierarchySpec, attribute_levels,
+                                  attribute_residency, attribution_accuracy,
+                                  directory_aliasing, l2_filter_reliable,
+                                  quiet_l2_colors)
 from repro.core.host_model import (CotenantWorkload, GuestVM, HostEvent,
                                    SimHost, probe_dispatch_count)
 from repro.core.plancost import (PlanCost, TuneReport, clear_tune_cache,
@@ -101,7 +113,10 @@ __all__ = [
     "FleetSim",
     "FleetWorkload",
     "GuestVM",
+    "HarvestStats",
+    "HierarchySpec",
     "HostEvent",
+    "L2HarvestTier",
     "MonitoredSet",
     "PlanCost",
     "PlanLowering",
@@ -122,17 +137,24 @@ __all__ = [
     "all_platforms",
     "allow_pull",
     "attack_gen",
+    "attribute_levels",
+    "attribute_residency",
+    "attribution_accuracy",
     "classify_trace",
     "clear_tune_cache",
     "color_accuracy",
     "dataclass_csv_header",
     "dataclass_csv_row",
+    "directory_aliasing",
     "fig10_summary",
     "get_platform",
+    "harvest_summary",
+    "l2_filter_reliable",
     "list_platforms",
     "plan_cost",
     "policy_place",
     "probe_dispatch_count",
+    "quiet_l2_colors",
     "register_platform",
     "run_cachex",
     "run_fleet",

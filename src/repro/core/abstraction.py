@@ -123,6 +123,12 @@ class ProbeConfig:
     ``vscan_pool_cap``   the cap applied to the derived pool size.
     ``prune_self_conflicts``  drop monitored sets thrashed by VSCAN's own
                          priming after construction (few-row geometries).
+    ``l2_monitor_cores`` cores whose private L2 gets per-color monitored
+                         sets (level="l2") appended to the VSCAN
+                         population — the harvest tier's capacity
+                         sensors.  Empty (the default) keeps monitoring
+                         LLC-only and bit-identical to pre-hierarchy
+                         sessions.
     ``window_ms``        Prime+Probe wait window (auto-adjusted live).
     ``ewma_alpha``       EWMA smoothing of eviction rates.
     ``refresh_interval_ms``  staleness bound for
@@ -142,6 +148,7 @@ class ProbeConfig:
     vscan_pool_pages: Optional[int] = None
     vscan_pool_cap: int = VSCAN_POOL_CAP_PAGES
     prune_self_conflicts: bool = False
+    l2_monitor_cores: Tuple[int, ...] = ()
     window_ms: float = DEFAULT_WINDOW_MS
     ewma_alpha: float = 0.3
     refresh_interval_ms: float = 50.0
@@ -249,10 +256,16 @@ class ContentionView:
     """One monitoring interval's published contention measurements.
 
     ``per_domain``/``per_color`` are EWMA eviction rates (%-lines/ms, the
-    VSCAN scale); ``mean_rate`` is this interval's *instantaneous* mean
-    rate across monitored sets (what `run_cachex` reports as idle/hot).
-    ``measured_at_ms`` (simulated clock) + :meth:`age_ms` are the staleness
-    metadata; ``interval`` counts refreshes since attach.
+    VSCAN scale) over *LLC-level* monitored sets; ``mean_rate`` is this
+    interval's *instantaneous* mean rate across monitored sets (what
+    `run_cachex` reports as idle/hot).  ``per_level`` breaks the EWMA out
+    by monitored cache level ("llc", and "l2" when
+    ``ProbeConfig.l2_monitor_cores`` sensors exist) — the signal repair
+    uses to rebuild only the level that broke; ``l2_cores`` is the
+    per-core private-L2 rate the CAP harvest tier ranks quiet cores by
+    (both empty on LLC-only sessions).  ``measured_at_ms`` (simulated
+    clock) + :meth:`age_ms` are the staleness metadata; ``interval``
+    counts refreshes since attach.
     """
 
     per_domain: Dict[int, float]
@@ -263,6 +276,10 @@ class ContentionView:
     interval: int
     #: abstraction epoch the view was measured under (bumps per repair)
     epoch: int = 0
+    #: mean EWMA rate per monitored cache level ("llc" / "l2")
+    per_level: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: per-core private-L2 eviction rate (harvest-tier capacity sensing)
+    l2_cores: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     def age_ms(self, now_ms: float) -> float:
         return now_ms - self.measured_at_ms
@@ -508,7 +525,41 @@ class CacheXSession:
         self._vs, self.vscan_info, self._domain_vcpus = _build_vscan(
             self.vm, self.platform, self._vcol, self._cf, self.config,
             domain_vcpus=self._domain_vcpus, ways=self.effective_ways())
+        self._add_l2_monitors()
         self._note_probed_epoch()
+
+    def _add_l2_monitors(self) -> None:
+        """Append per-core private-L2 monitored sets (level="l2") for
+        ``ProbeConfig.l2_monitor_cores``.
+
+        No extra probing: the VCOL color filters already *are* verified L2
+        eviction sets (one per virtual color), and L2 congruence is an HPA
+        property — the same lines index the same set of any core's L2, so
+        a filter clone primed and probed from a vCPU on the target core
+        measures that core's private L2.  Clones (not the filter objects)
+        join the population so a monitored-slot repair never mutates the
+        color filters."""
+        from repro.core.vscan import MonitoredSet
+        cores = self.config.l2_monitor_cores
+        if not cores or self._vs is None:
+            return
+        core_vcpu: Dict[int, int] = {}
+        for v, c in enumerate(self.vm.vcpu_cores):
+            core_vcpu.setdefault(int(c), v)
+        new = []
+        for core in cores:
+            vcpu = core_vcpu.get(int(core))
+            if vcpu is None:
+                continue            # no vCPU scheduled on that core
+            domain = int(core) // self.platform.cores_per_domain
+            for color, es in enumerate(self._cf.filters):
+                new.append(MonitoredSet(
+                    es=EvictionSet(gvas=np.array(es.gvas, np.int64),
+                                   offset=es.offset, level="l2",
+                                   spares=np.array(es.spares, np.int64)),
+                    color=color, domain=domain, vcpu=vcpu, level="l2"))
+        self._vs.add_sets(new)
+        self.vscan_info["l2_monitors"] = len(new)
 
     # -- queries -------------------------------------------------------------
     def topology(self) -> TopologyView:
@@ -640,7 +691,9 @@ class CacheXSession:
             window_ms=snap.window_ms,
             measured_at_ms=snap.time_ms,
             interval=self._intervals,
-            epoch=self.epoch)
+            epoch=self.epoch,
+            per_level=self._vs.per_level_rate(),
+            l2_cores=self._vs.l2_core_rate())
         self._last = view
         for fn in list(self._subs.values()):
             fn(view)
@@ -751,14 +804,27 @@ class CacheXSession:
             out["any_broken"] |= bool((~lv).any())
         if self._vs is not None:
             mon = self._vs.monitored
-            mv = vev.validate_sets([m.es for m in mon], "llc",
-                                   vcpus=[m.vcpu for m in mon])
+            mv = self._validate_monitored(vev, mon)
             # drift quarantine = broken until fixed; attack quarantine is
             # interference over an intact set — not a validity defect
             mv &= ~(self._vs.flagged & ~self._vs.attack_flagged)
             out["vscan_valid"] = mv
             out["any_broken"] |= bool((~mv).any())
         return out
+
+    def _validate_monitored(self, vev: VEV, mon) -> np.ndarray:
+        """Validate the monitored sets grouped by cache level — each
+        level's group rides one fused Validate dispatch at *its* miss
+        threshold, so an L2 sensor is never judged by LLC latencies
+        (and vice versa)."""
+        mv = np.ones(len(mon), bool)
+        for lv in ("llc", "l2"):
+            idx = [i for i, m in enumerate(mon) if m.level == lv]
+            if idx:
+                mv[idx] = vev.validate_sets(
+                    [mon[i].es for i in idx], lv,
+                    vcpus=[mon[i].vcpu for i in idx])
+        return mv
 
     def repair(self) -> RepairReport:
         """Incrementally repair the probed abstraction after host drift.
@@ -793,11 +859,10 @@ class CacheXSession:
         lvalid = (vev.validate_sets(self._llc_sets, "llc")
                   if self._topo_ready else None)
         mon = self._vs.monitored if self._vs is not None else []
-        mon_vcpus = [m.vcpu for m in mon]
+        mon_llc = np.array([m.level == "llc" for m in mon], bool)
         mvalid = None
         if self._vs is not None:
-            mvalid = vev.validate_sets([m.es for m in mon], "llc",
-                                       vcpus=mon_vcpus)
+            mvalid = self._validate_monitored(vev, mon)
             # drift-quarantined sets count as broken (rebuild lifts the
             # flag); attack-quarantined sets are intact — rebuilding them
             # would let an attacker force arbitrarily expensive repairs.
@@ -813,11 +878,18 @@ class CacheXSession:
         # `probe_associativity` reads the new allocation; after a
         # migration the pool is random and detection abstains (None).
         ways_changed = False
-        llc_valids = [x for x in (lvalid, mvalid) if x is not None and len(x)]
+        # the CAT-expansion signature is an *LLC* phenomenon: L2 sensors
+        # (private geometry, untouched by a repartition) stay out of it
+        llc_valids = [x for x in (lvalid,
+                                  mvalid[mon_llc] if mvalid is not None
+                                  else None)
+                      if x is not None and len(x)]
         all_llc_broken = bool(llc_valids) and not any(
             bool(x.any()) for x in llc_valids)
         if self._capacity_suspect or all_llc_broken:
-            probe_sets = (list(self._llc_sets) or [m.es for m in mon])
+            probe_sets = (list(self._llc_sets)
+                          or [m.es for i, m in enumerate(mon)
+                              if mon_llc[i]])
             if probe_sets:
                 es = max(probe_sets, key=lambda e: len(e.spares))
                 pool = np.concatenate([np.asarray(es.gvas, np.int64),
@@ -904,11 +976,32 @@ class CacheXSession:
         if self._vs is not None:
             counts["vscan_checked"] = len(mon)
             if ways_changed:
-                mvalid[:] = False
+                # a repartition resizes LLC sets only; private-L2 sensors
+                # keep their geometry and their validation verdicts
+                mvalid[mon_llc] = False
             if (~mvalid).any():
-                new_sets, repaired, failed = self._repair_pass(
-                    vev, [m.es for m in mon], mvalid, "llc", ways,
-                    cfg.seed, vcpus=mon_vcpus)
+                # repair per level: each group rebuilds at its own level's
+                # associativity (LLC at the detected ways, L2 at the
+                # platform's private-L2 ways) — only the level that broke
+                # costs dispatches
+                new_sets = [m.es for m in mon]
+                repaired: List[int] = []
+                failed: List[int] = []
+                for lv, lv_ways in (("llc", ways), ("l2", plat.l2.n_ways)):
+                    idx = [i for i in range(len(mon))
+                           if mon[i].level == lv and not mvalid[i]]
+                    if not idx:
+                        continue
+                    grp = [i for i in range(len(mon))
+                           if mon[i].level == lv]
+                    sub, sub_rep, sub_fail = self._repair_pass(
+                        vev, [mon[i].es for i in grp], mvalid[grp],
+                        lv, lv_ways, cfg.seed,
+                        vcpus=[mon[i].vcpu for i in grp])
+                    for k, i in enumerate(grp):
+                        new_sets[i] = sub[k]
+                    repaired += [grp[k] for k in sub_rep]
+                    failed += [grp[k] for k in sub_fail]
                 if failed:
                     counts["vscan_rebuilt"] = len(mon)
                     vm.free_pages(np.unique(
@@ -1007,6 +1100,7 @@ class CacheXSession:
         ``effective_ways`` restore the session's repair lineage."""
         cfg = dataclasses.asdict(self.config)
         cfg["offsets"] = list(cfg["offsets"])
+        cfg["l2_monitor_cores"] = list(cfg["l2_monitor_cores"])
         data: Dict = {"format": EXPORT_FORMAT,
                       "platform": self.platform.name, "config": cfg,
                       "host_epoch": (self._probed_host_epoch
@@ -1078,6 +1172,7 @@ class CacheXSession:
         if config is None:
             kw = dict(data["config"])
             kw["offsets"] = tuple(kw["offsets"])
+            kw["l2_monitor_cores"] = tuple(kw.get("l2_monitor_cores", ()))
             if isinstance(kw.get("lowering"), dict):
                 kw["lowering"] = PlanLowering(**kw["lowering"])
             config = ProbeConfig(**kw)

@@ -34,7 +34,11 @@ Accesses carry the issuing core: each core has a private L2; each domain of
 ``cores_per_domain`` cores shares one LLC.  Co-tenant VM accesses only touch
 the LLC of their domain (their private caches are irrelevant to the probing
 VM) but *do* back-invalidate the prober's private lines on LLC eviction —
-the mechanism Prime+Probe depends on.
+the mechanism Prime+Probe depends on.  ``MachineGeometry.inclusion``
+selects the directory variant: ``"inclusive"`` (the default, modelled
+above) back-invalidates; ``"non_inclusive"`` lets L2-resident lines
+survive LLC eviction (see `repro.core.hierarchy` for the probing
+consequences of each).
 """
 
 from __future__ import annotations
@@ -99,7 +103,21 @@ def slice_hash(block_addr, n_slices: int, seed: int = 0x9E3779B9):
 
 @dataclasses.dataclass(frozen=True)
 class MachineGeometry:
-    """`n_domains` LLC domains, each with `cores_per_domain` private-L2 cores."""
+    """`n_domains` LLC domains, each with `cores_per_domain` private-L2 cores.
+
+    ``inclusion`` selects the hierarchy variant (paper platforms mix both):
+
+      * ``"inclusive"`` — the LLC entry doubles as the inclusive directory
+        entry (Skylake's snoop filter, Yan et al. [70]): evicting it
+        back-invalidates the line from every private L2 in the domain.
+        This is what makes LLC eviction sets observable from L2-resident
+        lines — and what milan_ccx's small LLC aliases through.
+      * ``"non_inclusive"`` — no back-invalidation: an L2-resident line
+        survives its LLC/directory entry being evicted (a victim-cache /
+        exclusive-leaning design).  LLC probing then only observes lines
+        that actually left the private level, so per-level attribution
+        must probe each level on its own terms.
+    """
 
     n_domains: int = 1
     cores_per_domain: int = 2
@@ -107,6 +125,7 @@ class MachineGeometry:
     llc: CacheGeometry = dataclasses.field(default_factory=lambda: skylake_llc(4))
     replacement: str = "lru"  # "lru" | "random"
     slice_seed: int = 0x9E3779B9
+    inclusion: str = "inclusive"  # "inclusive" | "non_inclusive"
 
     @property
     def n_cores(self) -> int:
@@ -186,14 +205,17 @@ def _access_one(state, geom: MachineGeometry, core, block, cotenant):
     victim = jnp.where(valid, victim, -1)
 
     # ---- back-invalidation of the directory victim from this domain's cores
-    has_victim = victim >= 0
-    safe_victim = jnp.where(has_victim, victim, 0)
-    v_set = (safe_victim % geom.l2.n_sets).astype(jnp.int32)
-    core_ids = jnp.arange(geom.n_cores, dtype=jnp.int32)
-    in_domain = (core_ids // geom.cores_per_domain) == domain
-    rows = l2_tags[:, v_set]  # (n_cores, ways)
-    inval = (has_victim & in_domain)[:, None] & (rows == safe_victim)
-    l2_tags = l2_tags.at[:, v_set].set(jnp.where(inval, -1, rows))
+    # (inclusive hierarchies only: `geom` is a static jit key, so this
+    # Python branch compiles the non-inclusive variant without the work)
+    if geom.inclusion == "inclusive":
+        has_victim = victim >= 0
+        safe_victim = jnp.where(has_victim, victim, 0)
+        v_set = (safe_victim % geom.l2.n_sets).astype(jnp.int32)
+        core_ids = jnp.arange(geom.n_cores, dtype=jnp.int32)
+        in_domain = (core_ids // geom.cores_per_domain) == domain
+        rows = l2_tags[:, v_set]  # (n_cores, ways)
+        inval = (has_victim & in_domain)[:, None] & (rows == safe_victim)
+        l2_tags = l2_tags.at[:, v_set].set(jnp.where(inval, -1, rows))
 
     lat = jnp.where(~valid, 0,
                     jnp.where(l2_hit, LAT_L2,

@@ -33,7 +33,7 @@ import numpy as np
 from repro.core.cachesim import (BLOCKS_PER_PAGE, L2_MISS_THRESHOLD,
                                  LLC_MISS_THRESHOLD, LINE_BITS, PAGE_BITS)
 from repro.core.host_model import GuestVM
-from repro.core import probeplan
+from repro.core import hierarchy, probeplan
 from repro.core.probeplan import PlanLowering, ProbePlan, Validate, Vote
 
 C_POOL_SCALE = 3  # paper §3.1: scaling factor C
@@ -52,21 +52,25 @@ def _probe_lanes(tests, prime_reps: int) -> List[np.ndarray]:
 def vote_plan(tests: Sequence[Tuple[int, Sequence[int]]], prime_reps: int,
               vcpu: int, threshold: int, votes: int,
               lowering: Optional[PlanLowering] = None,
-              label: str = "vev.vote") -> ProbePlan:
+              label: str = "vev.vote", level: str = "llc") -> ProbePlan:
     """Compile a round of (target, candidates) eviction tests to a one-op
     ProbePlan: a majority-voted :class:`~repro.core.probeplan.Vote` over
-    the Prime+Probe lanes ``[target, candidates*prime_reps, target]``."""
+    the Prime+Probe lanes ``[target, candidates*prime_reps, target]``.
+    ``level`` stamps the op (and the plan's signature) with the cache
+    level the threshold separates, so cost models and tuner caches keyed
+    on signatures never conflate L2 and LLC programs."""
     lanes = tuple(_probe_lanes(tests, prime_reps))
     return ProbePlan(
         ops=(Vote(lanes=lanes, vcpus=(vcpu,) * len(lanes),
-                  threshold=threshold, votes=votes),),
+                  threshold=threshold, votes=votes, level=level),),
         label=label, hints=lowering)
 
 
 def validate_plan(sets: Sequence[EvictionSet], prime_reps: int,
                   vcpus: Sequence[int], threshold: int, votes: int,
                   lowering: Optional[PlanLowering] = None,
-                  label: str = "vev.validate") -> ProbePlan:
+                  label: str = "vev.validate",
+                  level: str = "llc") -> ProbePlan:
     """Compile a drift-validity check of built eviction sets to a one-op
     :class:`~repro.core.probeplan.Validate` ProbePlan: one
     ``[spare, members, spare]`` Prime+Probe lane per set that has a
@@ -79,7 +83,7 @@ def validate_plan(sets: Sequence[EvictionSet], prime_reps: int,
     return ProbePlan(
         ops=(Validate(lanes=lanes,
                       vcpus=tuple(vcpus[i] for i in testable),
-                      threshold=threshold, votes=votes),),
+                      threshold=threshold, votes=votes, level=level),),
         label=label, hints=lowering,
         meta={"indices": testable, "n_sets": len(sets)})
 
@@ -219,7 +223,7 @@ class VEV:
         if self.use_plans:
             plan = vote_plan(tests, self.prime_reps, self.vcpu,
                              self._threshold(level), self.votes,
-                             lowering=self.lowering)
+                             lowering=self.lowering, level=level)
             return probeplan.execute(self.vm, plan).last
         return _majority_verdicts(self.vm,
                                   _probe_lanes(tests, self.prime_reps),
@@ -498,7 +502,7 @@ class VEV:
         if self.use_batch:
             plan = validate_plan(sets, self.prime_reps, vcpus,
                                  self._threshold(level), self.votes,
-                                 lowering=self.lowering)
+                                 lowering=self.lowering, level=level)
             op = plan.ops[0]
             if op.lanes:
                 self.stats.tests += len(op.lanes) * self.votes
@@ -531,7 +535,7 @@ class VEV:
             plan = ProbePlan(
                 ops=(Vote(lanes=tuple(lanes), vcpus=tuple(lane_vcpus),
                           threshold=self._threshold(level),
-                          votes=self.votes),),
+                          votes=self.votes, level=level),),
                 label="vev.repair", hints=self.lowering)
             return np.asarray(probeplan.execute(self.vm, plan).last, bool)
         return np.asarray(_majority_verdicts(
@@ -616,17 +620,27 @@ class VEV:
             else:
                 alias_suspect.append(i)
         # round 3 (rare): group-testing fallback on the same pools, ONLY
-        # for sets whose pool had enough survivors yet failed sanity.  The
-        # filter round reads *any* eviction as congruence, so when a pool
-        # aliases another cache level's sets (e.g. an LLC with fewer sets
-        # than the L2: odd L2 colors share one directory set and a big
-        # pool back-invalidates through it), drifted lines can sneak past
-        # it — sanity catches the bad reassembly and the classic prune
-        # (whose verdicts self-correct once the pool shrinks below the
-        # alias threshold) recovers the set, still from survivors only.
-        # Pools that simply drifted beyond recovery (migration) skip the
-        # fallback: grinding group tests on random lines would waste the
-        # dispatch budget the caller needs for its fresh-pool rebuild.
+        # for sets whose pool had enough survivors yet failed sanity AND
+        # only where the hierarchy model says back-invalidation aliasing
+        # can produce that signature.  The filter round reads *any*
+        # eviction as congruence; on a back-invalidating hierarchy whose
+        # directory exposes fewer set indices than this level (milan_ccx:
+        # 128-set LLC under a 256-set L2), L2 colors differing in the
+        # dropped index bits share one directory row, a big single-color
+        # lane overflows it, and the resulting back-invalidations evict
+        # lines the pool is NOT L2-congruent with — drifted lines read as
+        # survivors.  Sanity refuting a survivor-rich reassembly is that
+        # effect *measured*, and the classic prune (whose verdicts
+        # self-correct once the pool shrinks below the directory's
+        # associativity) recovers the set, still from survivors only.
+        # Where the model rules aliasing out (non-inclusive hierarchy,
+        # LLC-level sets, set-rich directories), a refuted reassembly is
+        # plain unrecoverable drift: the suspects join ``failed`` and the
+        # caller's fresh-pool rebuild gets the dispatch budget instead.
+        spec = hierarchy.HierarchySpec.of(self.vm.host.geom)
+        if alias_suspect and not spec.directory_aliasing(level):
+            failed.extend(alias_suspect)
+            alias_suspect = []
         if alias_suspect:
             pools = {i: pool for i, pool, _, _ in spans}
             jobs = [{"offset": sets[i].offset, "pool": pools[i],
@@ -719,7 +733,8 @@ def build_many(vm: GuestVM, jobs: List[Dict], level: str, ways: int,
             rounds[i] += votes   # dispatches this job would issue alone
         if use_plans:
             plans = [vote_plan(pending[i], prime_reps, vevs[i].vcpu, thr,
-                               votes, lowering=lowering, label="vev.build")
+                               votes, lowering=lowering, label="vev.build",
+                               level=level)
                      for i in order]
             fused, spans = probeplan.fuse(plans)
             split = probeplan.split_result(probeplan.execute(vm, fused),

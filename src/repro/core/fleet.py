@@ -60,10 +60,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hierarchy
 from repro.core.abstraction import CacheXSession, ProbeConfig
 from repro.core.attacker import AttackerGuest
 from repro.core.cachesim import BLOCKS_PER_PAGE, LAT_L2
-from repro.core.cap import CapAllocator
+from repro.core.cap import CapAllocator, L2HarvestTier
 from repro.core.cas import TierTracker, policy_place
 from repro.core.host_model import (CotenantWorkload, HostEvent,
                                    congruent_gen, polluter_gen)
@@ -195,6 +196,14 @@ class FleetReport:
                          identified the polluted domain (and, under CAS,
                          the sensitive task sat in a quiet domain);
                          -1 = a drift scenario ran but never re-converged.
+    ``harvest*``/``l2_*_rate``  L2-harvest-scenario accounting (harvest
+                         runs only): the knob ("off" = same thrashed
+                         scenario without the routing), intervals the
+                         working set actually ran on a granted quiet core,
+                         the tier's grant / revocation / promotion
+                         counters, and the mean measured per-core L2 rates
+                         of the sensitive task's (thrashed) core vs the
+                         chosen harvest core.
     """
 
     platform: str
@@ -228,6 +237,13 @@ class FleetReport:
     residency_pre: float = 0.0
     residency_during: float = 0.0
     residency_post: float = 0.0
+    harvest: str = "none"        # "none" | "off" | "on"
+    harvest_intervals: int = 0
+    harvest_grants: int = 0
+    harvest_revocations: int = 0
+    harvest_promotions: int = 0
+    l2_hot_rate: float = 0.0
+    l2_quiet_rate: float = 0.0
 
     @classmethod
     def csv_header(cls) -> str:
@@ -252,9 +268,13 @@ class FleetSim:
                  drift: Union[bool, Sequence[DriftSpec]] = False,
                  repair_on_drift: bool = True, revalidate_every: int = 4,
                  attack: Union[bool, AttackSpec] = False,
-                 defend: bool = True, with_poisoner: bool = True):
+                 defend: bool = True, with_poisoner: bool = True,
+                 harvest: Optional[str] = None,
+                 harvest_threshold: float = 0.25):
         if policy not in FLEET_POLICIES:
             raise ValueError(f"policy must be one of {FLEET_POLICIES}")
+        if harvest not in (None, "off", "on"):
+            raise ValueError("harvest must be None, 'off' or 'on'")
         plat0 = get_platform(platform) if isinstance(platform, str) else platform
         self.tasks = workloads if workloads is not None else default_workloads()
         self.plat = fleet_view(plat0, len(self.tasks))
@@ -283,11 +303,17 @@ class FleetSim:
                             for v, c in enumerate(self.vm.vcpu_cores)}
 
         # -- probing stack: the same session API run_cachex drives ----------
-        self.session = CacheXSession.attach(
-            self.vm, self.plat,
-            ProbeConfig.for_platform(self.plat, use_batch=use_batch,
-                                     use_plans=use_plans, seed=seed,
-                                     prune_self_conflicts=True))
+        cfg = ProbeConfig.for_platform(self.plat, use_batch=use_batch,
+                                       use_plans=use_plans, seed=seed,
+                                       prune_self_conflicts=True)
+        if harvest is not None:
+            # harvest scenarios monitor every core's private L2 (VSCAN
+            # clones the color filters per core) so the tier's quiet-core
+            # probe covers the whole machine
+            n_cores = self.plat.n_domains * self.plat.cores_per_domain
+            cfg = dataclasses.replace(
+                cfg, l2_monitor_cores=tuple(range(n_cores)))
+        self.session = CacheXSession.attach(self.vm, self.plat, cfg)
         self.lowering = self.session.config.lowering
         self.colors = self.session.colors()          # VCOL color filters
         self.session.monitored_sets()                # VSCAN monitor build
@@ -356,6 +382,8 @@ class FleetSim:
             rate_per_ms=0.6 * llc.n_sets * llc.n_slices,
             gen=polluter_gen(region_pages=2048)))
 
+        self.harvest_mode = harvest
+        self.harvest_on = harvest == "on"
         self._setup_page_cache()
 
         # -- the fleet: every workload born on the polluted domain ----------
@@ -371,6 +399,47 @@ class FleetSim:
         # second drives the page-cache stream
         self._sens = self.tasks[0]
         self._streamer = self.tasks[min(1, len(self.tasks) - 1)]
+
+        # -- L2 harvest scenario (PR 8): an SMT-sibling co-tenant thrashes
+        #    the sensitive task's private L2 wherever it runs.  The working
+        #    set's latency is measured *residually* (before the interval's
+        #    re-traversal, after a full co-tenant window) so it reflects
+        #    what actually survived in the L2.  harvest="on" routes the
+        #    working set to the tier's measured-quiet core; harvest="off"
+        #    runs the identical scenario without the routing — the on-vs-off
+        #    delta isolates the harvest decision itself.
+        self.harvest_tier: Optional[L2HarvestTier] = None
+        self.stat_harvest_intervals = 0
+        if harvest is not None:
+            spec = hierarchy.HierarchySpec.of(self.plat)
+            self.harvest_tier = self.cap.attach_harvest(L2HarvestTier(
+                spec, quiet_threshold=harvest_threshold))
+            if not self.cap_on:
+                # cap-off runs still step the tier on every publication
+                self.session.subscribe(self.harvest_tier.on_contention)
+            # the sibling's working set conflicts with the sensitive
+            # working set in the *L2* (same set residues, enough aliases
+            # to roll the L2's ways) but barely touches its LLC sets —
+            # per residue the aliases spread across the LLC's extra index
+            # bits, so the LLC copies (and back-invalidation) are left
+            # alone and the damage is genuinely L2-local.  Target
+            # residues come from the hypercall side, like `_true_color`:
+            # scenario instrumentation, not the decision stack.
+            l2 = self.plat.l2
+            ws_blocks = {self.vm.hypercall_hpa_page(int(p))
+                         * BLOCKS_PER_PAGE + b
+                         for p in self.ws_pages for b in (0, 1)}
+            l2_sets = sorted({int(b) % l2.n_sets for b in ws_blocks})
+            aliases = l2.n_ways + 4
+            sens_core = int(self.vm.vcpu_cores[self._sens.vcpu])
+            self.host.add_cotenant(CotenantWorkload(
+                "l2_thrasher", sens_core // self.plat.cores_per_domain,
+                rate_per_ms=50.0 * len(l2_sets),
+                gen=congruent_gen(
+                    l2_sets, l2.n_sets, base_page=1 << 18,
+                    span_pages=max(1, aliases * l2.n_sets
+                                   // BLOCKS_PER_PAGE)),
+                core=sens_core, l2_local=True))
 
     # ----------------------------------------------------------------- tune
     def tune(self, n_guests: int = 1, measure: bool = True,
@@ -428,11 +497,22 @@ class FleetSim:
             return (len(set(self._rows_of_true_color(truths[c])) - p_rows),
                     len(lists[c]))
         w_cands = [c for c in cands if c != self.stream_color]
+        if self.harvest_mode is not None:
+            # harvest scenarios keep the working set's L2 sets clear of
+            # the color filters': the ws lines live at block offsets 0/1
+            # of their pages, and a filter built at offset 0 or 64 would
+            # occupy those exact L2 sets — its per-core L2 monitor clone
+            # then primes the promoted lines out of the harvest core
+            # every interval
+            clear = [c for c in w_cands
+                     if self.session._cf.filters[c].offset not in (0, 64)]
+            w_cands = clear or w_cands
         self.ws_color = max(w_cands, key=disjointness)
 
         ws = [lists[self.ws_color].pop()
               for _ in range(min(self.n_ws_pages,
                                  len(lists[self.ws_color]) - 1))]
+        self.ws_pages = ws
         self.ws_lines = np.array([self.vm.gva(p, off)
                                   for p in ws for off in (0, 64)])
         self.free_lists = lists
@@ -644,9 +724,14 @@ class FleetSim:
 
     # ----------------------------------------------------------------- loop
     def _noise_per_domain(self) -> np.ndarray:
+        # L2-local co-tenants are core-private pressure: their effect
+        # reaches the fleet through the *measured* working-set latency
+        # (and the measured per-core L2 rates), not the LLC contention
+        # term of the IPC model
         out = np.zeros(self.plat.n_domains)
         for wl in self.host.cotenants:
-            if wl.enabled and not wl.name.startswith("fleet:"):
+            if (wl.enabled and not wl.name.startswith("fleet:")
+                    and not wl.l2_local):
                 out[wl.domain] += wl.rate_per_ms
         return out
 
@@ -692,6 +777,8 @@ class FleetSim:
         lat_hist: List[float] = []
         hot_hist: List[float] = []
         quiet_hist: List[float] = []
+        l2_hot_hist: List[float] = []
+        l2_quiet_hist: List[float] = []
         for k in range(self.n_intervals):
             # drift scenario: host events land mid-window; repairs run
             # before the probe so this interval measures with a (possibly
@@ -708,6 +795,30 @@ class FleetSim:
             for task in tasks:
                 self.host.retarget_cotenant(f"fleet:{task.name}",
                                             domain=self.vcpu_domain[task.vcpu])
+            if self.harvest_mode is not None:
+                # the SMT-sibling thrasher is co-scheduled with the
+                # sensitive task: it follows its core (one interval behind
+                # placement, like a real sibling pair).  Only that core is
+                # excluded a priori — it hosts known L2-local pressure;
+                # every other core's L2 stands or falls by its measured
+                # rate (fleet tasks are LLC-rate workloads whose cores'
+                # private L2s are exactly the idle capacity to harvest)
+                sens_core = int(vm.vcpu_cores[self._sens.vcpu])
+                self.host.retarget_cotenant(
+                    "l2_thrasher", core=sens_core,
+                    domain=sens_core // plat.cores_per_domain)
+                # also exclude the probe's own home cores: the windowed
+                # LLC monitor primes stream through those cores' L2s every
+                # tick, so anything promoted there is evicted within one
+                # window — and the monitors can't see it, because the
+                # prime traffic refreshes its own lines (those cores
+                # measure quiet).  Structural knowledge only the probing
+                # layer has, so the fleet feeds it to the tier.
+                mon_cores = {int(vm.vcpu_cores[v])
+                             for vs in self.domain_vcpus.values()
+                             for v in vs}
+                self.harvest_tier.exclude_cores = tuple(sorted(
+                    {sens_core} | mon_cores))
             # probe + decide: one windowed Prime+Probe interval over every
             # domain; the published ContentionView drives the subscribed
             # CAS tiers and CAP ranking (decision stack never polls VScan)
@@ -734,30 +845,62 @@ class FleetSim:
             stream = self._stream_pages()
             stream_lines = np.array([vm.gva(p, off)
                                      for p in stream for off in (0, 64)])
-            # measure: the working set's latency after the stream (batched
-            # timed lanes; uncommitted measurement probe)
+            # harvest decision: route the working set's traversal (and its
+            # timed measurement) to the tier's quietest granted L2 — the
+            # probe→decide→act edge of the harvest loop.  harvest="off"
+            # keeps the sensitive task's own (thrashed) core.
+            ws_vcpu = self._sens.vcpu
+            if self.harvest_on and self.harvest_tier.granted:
+                hc = int(self.harvest_tier.granted[0])
+                ws_vcpu = next((v for v, c in enumerate(vm.vcpu_cores)
+                                if int(c) == hc), ws_vcpu)
+                self.stat_harvest_intervals += 1
+            # measure: the working set's latency (batched timed lanes;
+            # uncommitted measurement probe).  Harvest scenarios measure
+            # *residually* — before this interval's re-traversal, so the
+            # latency reflects what survived the co-tenant window in the
+            # L2 — everything else keeps the after-the-stream order.
             if self._plan_route:
                 meta = {"seq_only": True} if seq_only else {}
-                yield ProbePlan(
+                traverse = ProbePlan(
                     ops=(Commit(segments=(
-                        Segment(gvas=self.ws_lines, vcpu=self._sens.vcpu),
+                        Segment(gvas=self.ws_lines, vcpu=ws_vcpu),
                         Segment(gvas=stream_lines,
                                 vcpu=self._streamer.vcpu))),),
                     label="fleet.traverse", hints=self.lowering,
                     meta=dict(meta))
-                lres = yield ProbePlan(
+                ws_lat = ProbePlan(
                     ops=(WarmTimer(),
                          Measure(lanes=(self.ws_lines,),
-                                 vcpus=(self._sens.vcpu,))),
+                                 vcpus=(ws_vcpu,))),
                     label="fleet.ws_lat", hints=self.lowering,
                     meta=dict(meta))
-                lat = float(np.mean(lres.last[0]))
+                if self.harvest_mode is not None:
+                    lres = yield ws_lat
+                    lat = float(np.mean(lres.last[0]))
+                    yield traverse
+                else:
+                    yield traverse
+                    lres = yield ws_lat
+                    lat = float(np.mean(lres.last[0]))
             else:
-                vm.access(self.ws_lines, vcpu=self._sens.vcpu)
-                vm.access(stream_lines, vcpu=self._streamer.vcpu)
-                vm.warm_timer()
-                lat = float(np.mean(vm.timed_access_batch(
-                    [self.ws_lines], vcpu=[self._sens.vcpu])[0]))
+                if self.harvest_mode is not None:
+                    vm.warm_timer()
+                    lat = float(np.mean(vm.timed_access_batch(
+                        [self.ws_lines], vcpu=[ws_vcpu])[0]))
+                    vm.access(self.ws_lines, vcpu=ws_vcpu)
+                    vm.access(stream_lines, vcpu=self._streamer.vcpu)
+                else:
+                    vm.access(self.ws_lines, vcpu=ws_vcpu)
+                    vm.access(stream_lines, vcpu=self._streamer.vcpu)
+                    vm.warm_timer()
+                    lat = float(np.mean(vm.timed_access_batch(
+                        [self.ws_lines], vcpu=[ws_vcpu])[0]))
+            if self.harvest_tier is not None:
+                # heat feed: the working set is the hot page-cache set the
+                # tier ranks promotion candidates from
+                for p in self.ws_pages:
+                    self.cap.touch(p)
             if self.cap_on:
                 self.cap.reclaim_all()   # interval end: page cache dropped
                 #                          under memory pressure (mechanism
@@ -788,6 +931,12 @@ class FleetSim:
                 hot_hist.append(dom_rates.get(POLLUTED_DOMAIN, 0.0))
                 quiet_hist.append(_mean([v for d, v in dom_rates.items()
                                          if d != POLLUTED_DOMAIN]))
+                if self.harvest_mode is not None and view.l2_cores:
+                    sc = int(vm.vcpu_cores[self._sens.vcpu])
+                    l2_hot_hist.append(view.l2_cores.get(sc, 0.0))
+                    if self.harvest_tier.granted:
+                        l2_quiet_hist.append(view.l2_cores.get(
+                            int(self.harvest_tier.granted[0]), 0.0))
 
         return FleetReport(
             platform=self.plat.name, policy=self.policy,
@@ -819,6 +968,17 @@ class FleetSim:
             residency_pre=(resid := self._residency_phases())[0],
             residency_during=resid[1],
             residency_post=resid[2],
+            harvest=self.harvest_mode or "none",
+            harvest_intervals=self.stat_harvest_intervals,
+            harvest_grants=(self.harvest_tier.stats.core_grants
+                            if self.harvest_tier else 0),
+            harvest_revocations=(self.harvest_tier.stats.core_revocations
+                                 if self.harvest_tier else 0),
+            harvest_promotions=(self.harvest_tier.stats.promotions
+                                if self.harvest_tier else 0),
+            l2_hot_rate=float(np.mean(l2_hot_hist)) if l2_hot_hist else 0.0,
+            l2_quiet_rate=(float(np.mean(l2_quiet_hist))
+                           if l2_quiet_hist else 0.0),
         )
 
 
@@ -939,6 +1099,29 @@ def fig10_summary(reports: List[FleetReport],
                and v.get("eevdf", 1) < threshold)
     return {"residency": res, "n_platforms": n, "cas_quiet": cas_ok,
             "eevdf_pinned": eevdf_ok, "separated": both}
+
+
+def harvest_summary(reports: List[FleetReport]) -> Dict:
+    """Harvest-on-vs-off deltas per platform (CAS + CAP runs of the L2
+    harvest scenario): measured residual working-set latency with the
+    harvest routing vs without, the latency improvement, and the
+    throughput delta — the L2-tier companion of
+    :func:`speedup_summary`'s ``cap_on_vs_off``."""
+    out: Dict[str, Dict[str, float]] = {}
+    for plat in sorted({r.platform for r in reports}):
+        def pick(h, field):
+            return _mean([getattr(r, field) for r in reports
+                          if r.platform == plat and r.harvest == h])
+        lat_on, lat_off = pick("on", "ws_lat_cycles"), pick("off", "ws_lat_cycles")
+        row = {"ws_lat_on": lat_on, "ws_lat_off": lat_off,
+               "lat_improvement": lat_off / lat_on - 1.0,
+               "throughput_delta": (pick("on", "throughput")
+                                    / pick("off", "throughput") - 1.0),
+               "harvest_intervals": pick("on", "harvest_intervals"),
+               "l2_hot_rate": pick("on", "l2_hot_rate"),
+               "l2_quiet_rate": pick("on", "l2_quiet_rate")}
+        out[plat] = {k: float(v) for k, v in row.items()}
+    return out
 
 
 def speedup_summary(reports: List[FleetReport]) -> Dict:

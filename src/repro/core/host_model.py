@@ -116,13 +116,24 @@ def _note_shape(kind: str, geom, shape) -> None:
 
 @dataclasses.dataclass
 class CotenantWorkload:
-    """A co-located VM generating LLC traffic at `rate_per_ms` accesses/ms."""
+    """A co-located VM generating LLC traffic at `rate_per_ms` accesses/ms.
+
+    By default the traffic issues from its domain's core 0 and — like any
+    foreign VM's accesses seen from the guest's perspective — bypasses the
+    modelled private L2s (the guest only shares the LLC with it).  Two
+    knobs extend that to the two-level hierarchy: ``core`` pins the
+    issuing core (a co-tenant vCPU *sharing a specific core* with the
+    guest), and ``l2_local=True`` makes the accesses fill that core's
+    private L2 — the SMT-sibling / core-sharing tenant whose working set
+    thrashes the L2 the harvest tier probes for."""
 
     name: str
     domain: int
     rate_per_ms: float
     gen: Callable[[np.random.Generator, int], np.ndarray]  # -> block addrs
     enabled: bool = True
+    core: Optional[int] = None    # issuing core (None: domain's core 0)
+    l2_local: bool = False        # fill the issuing core's private L2
 
 
 #: Event kinds that invalidate a probed cache abstraction (bump the epoch).
@@ -342,11 +353,14 @@ class SimHost:
 
     def retarget_cotenant(self, name: str, domain: Optional[int] = None,
                           rate_per_ms: Optional[float] = None,
-                          enabled: Optional[bool] = None) -> CotenantWorkload:
+                          enabled: Optional[bool] = None,
+                          core: Optional[int] = None,
+                          l2_local: Optional[bool] = None) -> CotenantWorkload:
         """Move/re-rate a registered traffic source.  The fleet simulator
         uses this to route a guest workload's LLC traffic into whichever
         domain the scheduler just placed it on — the *act* edge of the
-        probe→decide→act→measure loop."""
+        probe→decide→act→measure loop.  `core`/`l2_local` re-pin a
+        core-sharing tenant (pass core=-1 to clear the pin)."""
         wl = self.cotenant(name)
         if wl is None:
             raise KeyError(f"no cotenant named {name!r}")
@@ -356,11 +370,17 @@ class SimHost:
             wl.rate_per_ms = rate_per_ms
         if enabled is not None:
             wl.enabled = enabled
+        if core is not None:
+            wl.core = None if core < 0 else int(core)
+        if l2_local is not None:
+            wl.l2_local = bool(l2_local)
         return wl
 
-    def _cotenant_stream(self, ms: float) -> Tuple[np.ndarray, np.ndarray]:
+    def _cotenant_stream(self, ms: float
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         blocks: List[np.ndarray] = []
         cores: List[np.ndarray] = []
+        l2loc: List[np.ndarray] = []
         for wl in self.cotenants:
             if not wl.enabled:
                 continue
@@ -369,23 +389,30 @@ class SimHost:
                 continue
             b = wl.gen(self.rng, n).astype(np.int32)
             blocks.append(b)
-            # route the workload's LLC traffic into ITS domain
-            core = wl.domain * self.geom.cores_per_domain
+            # route the workload's LLC traffic into ITS domain (or the
+            # exact core it is pinned to)
+            core = (wl.core if wl.core is not None
+                    else wl.domain * self.geom.cores_per_domain)
             cores.append(np.full(n, core, np.int32))
+            l2loc.append(np.full(n, wl.l2_local, bool))
         if not blocks:
-            return np.empty(0, np.int32), np.empty(0, np.int32)
+            return (np.empty(0, np.int32), np.empty(0, np.int32),
+                    np.empty(0, bool))
         # interleave round-robin-ish by shuffling a concatenation
         allb = np.concatenate(blocks)
         allc = np.concatenate(cores)
+        alll = np.concatenate(l2loc)
         perm = self.rng.permutation(len(allb))
-        return allb[perm], allc[perm]
+        return allb[perm], allc[perm], alll[perm]
 
     def run_cotenants(self, ms: float) -> None:
-        blocks, cores = self._cotenant_stream(ms)
+        blocks, cores, l2_local = self._cotenant_stream(ms)
         if len(blocks) == 0:
             return
-        self._run_stream(blocks, cores=cores,
-                         cotenant=np.ones(len(blocks), bool))
+        # l2_local accesses run prober-style (cotenant=False): they fill
+        # the issuing core's private L2 — the core-sharing tenant model —
+        # while plain co-tenants stay LLC-only as before
+        self._run_stream(blocks, cores=cores, cotenant=~l2_local)
 
     # -- raw stream execution -------------------------------------------------
     def _run_stream(self, blocks: np.ndarray, cores: np.ndarray,

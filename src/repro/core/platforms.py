@@ -160,6 +160,15 @@ class CachePlatform:
                          knobs exist for ``random``).
     ``slice_seed``       seed of the hidden slice hash (the uncontrollable
                          HPA bits of §3.1-3.2); unknown to the guest.
+    ``inclusion``        hierarchy variant (``inclusive`` |
+                         ``non_inclusive``): whether evicting an LLC /
+                         directory entry back-invalidates the line from the
+                         domain's private L2s (see
+                         :class:`~repro.core.cachesim.MachineGeometry` and
+                         `repro.core.hierarchy`).  All shipped platforms
+                         model the inclusive-directory design (Skylake's
+                         snoop filter); tests exercise the non-inclusive
+                         variant via ``dataclasses.replace``.
     ``noise``            co-tenant traffic attached at boot
                          (:class:`NoiseSpec`, resolved lazily).
     ``votes``            majority votes per eviction test — what the VM
@@ -199,6 +208,7 @@ class CachePlatform:
     cores_per_domain: int = 2
     replacement: str = "lru"
     slice_seed: int = 0x9E3779B9
+    inclusion: str = "inclusive"
     noise: Tuple[NoiseSpec, ...] = ()
     votes: int = 1
     prime_reps: int = 1
@@ -234,15 +244,20 @@ class CachePlatform:
     def l2_filter_reliable(self) -> bool:
         """Whether L2 color filtering is noise-free on this scenario.
 
-        The simulator conflates the LLC entry with the snoop-filter
-        directory entry (see cachesim).  When the guest-effective LLC
-        associativity drops below the L2's (a small CAT allocation),
-        directory evictions back-invalidate L2 lines mid-filter and L2
-        eviction tests acquire systematic false positives.  Real Skylake
-        CAT partitions only *data* ways — the directory keeps full
-        associativity — so hardware L2 filtering is unaffected; the flag
-        marks where our abstraction diverges (documented in README)."""
-        return self.llc.n_ways >= self.l2.n_ways
+        Derived from the hierarchy model
+        (:func:`repro.core.hierarchy.l2_filter_reliable`): on an
+        *inclusive* hierarchy, a guest-effective LLC associativity below
+        the L2's (a small CAT allocation) means directory evictions
+        back-invalidate L2 lines mid-filter and L2 eviction tests acquire
+        systematic false positives; a non-inclusive hierarchy never
+        back-invalidates, so the filter stays reliable regardless.  Real
+        Skylake CAT partitions only *data* ways — the directory keeps
+        full associativity — so hardware L2 filtering is unaffected; the
+        flag marks where our abstraction diverges (documented in
+        README)."""
+        from repro.core import hierarchy
+        return hierarchy.l2_filter_reliable(self.inclusion, self.l2,
+                                            self.llc)
 
     def plan_lowering(self) -> PlanLowering:
         """Default ProbePlan lowering hints for this scenario — a starting
@@ -265,7 +280,7 @@ class CachePlatform:
         return MachineGeometry(
             n_domains=self.n_domains, cores_per_domain=self.cores_per_domain,
             l2=self.l2, llc=self.llc, replacement=self.replacement,
-            slice_seed=self.slice_seed)
+            slice_seed=self.slice_seed, inclusion=self.inclusion)
 
     def make_host_vm(self, seed: int = 0, n_guest_pages: int = 1 << 13,
                      mapping: str = "fragmented",

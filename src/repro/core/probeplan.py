@@ -120,23 +120,35 @@ class WarmTimer:
 @dataclasses.dataclass(frozen=True)
 class Measure:
     """B uncommitted timed lanes in one batched dispatch.  Output: a list
-    of per-lane int64 latency arrays (trimmed to lane length)."""
+    of per-lane int64 latency arrays (trimmed to lane length).
+
+    ``level`` declares which cache level the lanes probe (``"l2"`` |
+    ``"llc"`` | ``"mixed"`` when one dispatch carries lanes of both) —
+    pure metadata for plan introspection, cost attribution and the
+    tune-cache key (`repro.core.plancost`); consumers threshold the
+    returned latencies themselves."""
 
     lanes: Tuple[np.ndarray, ...]
     vcpus: Tuple[int, ...]
     salt: int = 0
+    level: str = "llc"
 
 
 @dataclasses.dataclass(frozen=True)
 class Vote:
     """Majority-voted eviction verdicts: ``votes`` Measure rounds over the
     same lanes (vote index = rng salt), each lane's verdict ``last-access
-    latency > threshold``, majority-reduced.  Output: bool array (B,)."""
+    latency > threshold``, majority-reduced.  Output: bool array (B,).
+
+    ``level`` names the cache level the ``threshold`` encodes — it keeps
+    per-level plans self-describing (and separately tune-cacheable)
+    without consumers reverse-engineering the level from the threshold."""
 
     lanes: Tuple[np.ndarray, ...]
     vcpus: Tuple[int, ...]
     threshold: int
     votes: int = 1
+    level: str = "llc"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,12 +159,14 @@ class Validate:
     still evicts its spare (valid), False = drift broke it (or the spare
     itself drifted; validation errs toward repair).  Structurally a
     ``Vote`` — the distinct kind makes drift-repair plans self-describing
-    and lets harnesses count validation cost separately."""
+    and lets harnesses count validation cost separately.  ``level`` names
+    the cache level validated (see :class:`Vote`)."""
 
     lanes: Tuple[np.ndarray, ...]
     vcpus: Tuple[int, ...]
     threshold: int
     votes: int = 1
+    level: str = "llc"
 
 
 ProbeOp = Union[Commit, Wait, WarmTimer, Measure, Vote, Validate]
@@ -175,8 +189,16 @@ class ProbePlan:
     def signature(self) -> Tuple[str, ...]:
         """Structural signature: op kind per position (congruence key for
         :func:`fuse` / :func:`execute_many`, and the tune-cache key in
-        `repro.core.plancost`) — lowering-independent by design."""
-        return tuple(type(op).__name__ for op in self.ops)
+        `repro.core.plancost`) — lowering-independent by design.  Batched
+        ops probing a non-default cache level carry it as a suffix
+        (``"Vote[l2]"``), so per-level plans fuse / tune-cache separately
+        while every existing LLC plan keeps its signature verbatim."""
+        names = []
+        for op in self.ops:
+            name = type(op).__name__
+            level = getattr(op, "level", "llc")
+            names.append(name if level == "llc" else f"{name}[{level}]")
+        return tuple(names)
 
     def effective_lowering(self) -> PlanLowering:
         """The lowering :func:`execute` will actually use — the plan's
@@ -315,19 +337,20 @@ def fuse(plans: Sequence[ProbePlan]) -> Tuple[ProbePlan, List[List[slice]]]:
                 lanes.extend(op.lanes)
                 vcpus.extend(op.vcpus)
             if isinstance(op0, (Vote, Validate)):
-                if any((op.threshold, op.votes)
-                       != (op0.threshold, op0.votes) for op in cur):
+                if any((op.threshold, op.votes, op.level)
+                       != (op0.threshold, op0.votes, op0.level)
+                       for op in cur):
                     raise ValueError("cannot fuse Votes with different "
-                                     "threshold/votes")
+                                     "threshold/votes/level")
                 ops.append(type(op0)(lanes=tuple(lanes), vcpus=tuple(vcpus),
                                      threshold=op0.threshold,
-                                     votes=op0.votes))
+                                     votes=op0.votes, level=op0.level))
             else:
                 if any(op.salt != op0.salt for op in cur):
                     raise ValueError("cannot fuse Measures with different "
                                      "salts")
                 ops.append(Measure(lanes=tuple(lanes), vcpus=tuple(vcpus),
-                                   salt=op0.salt))
+                                   salt=op0.salt, level=op0.level))
         elif isinstance(op0, Wait):
             if any(op.ms != op0.ms for op in cur):
                 raise ValueError("cannot fuse Waits of different lengths")
@@ -383,7 +406,8 @@ def execute_many(vms: Sequence[GuestVM],
                              f"plans: {sig} vs {p.signature()}")
     hints = plans[0].hints or DEFAULT_LOWERING
     outs: List[List] = [[] for _ in plans]
-    for j, kind in enumerate(sig):
+    for j, sig_kind in enumerate(sig):
+        kind = sig_kind.split("[", 1)[0]   # strip the level suffix
         ops = [p.ops[j] for p in plans]
         if kind == "Commit":
             commit_segments_multi(

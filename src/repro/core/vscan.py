@@ -28,6 +28,13 @@ same set index spread evenly over slices, so one set represents its row):
 
   * eviction-rate normalization (% of lines evicted per ms), EWMA smoothing,
     and per-LLC / per-color aggregation consumed by CAS and CAP.
+
+Monitored sets carry a cache *level* ("llc" by default): L2-level sets —
+built against a prober core's private L2, probed with the L2 miss
+threshold — ride the same interval plans, windows and drift machinery,
+but feed separate per-level/per-core aggregates (`per_level_rate`,
+`l2_core_rate`, `l2_color_rate`) that sense idle private-L2 capacity for
+CAP's harvest tier without perturbing the LLC contention signal.
 """
 
 from __future__ import annotations
@@ -38,9 +45,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cachesim import LLC_MISS_THRESHOLD
 from repro.core.color import ColorFilters, VCOL
 from repro.core.eviction import VEV, EvictionSet, build_many
+from repro.core.hierarchy import miss_threshold
 from repro.core.host_model import GuestVM
 from repro.core import probeplan
 from repro.core.probeplan import (Commit, Measure, PlanLowering, PlanResult,
@@ -95,6 +102,9 @@ class MonitoredSet:
     color: int          # virtual color (from the pool's color group)
     domain: int         # LLC domain whose vCPU probes it
     vcpu: int           # prober vCPU
+    level: str = "llc"  # cache level probed: "llc" (shared) or "l2" (the
+    #                     prober core's private L2 — harvest-tier capacity
+    #                     sensing; excluded from the LLC aggregates)
 
 
 @dataclasses.dataclass
@@ -213,7 +223,8 @@ class VScan:
             "default_window_ms": float(self.default_window_ms),
             "ewma_alpha": float(self.ewma_alpha),
             "monitored": [{"es": m.es.state_dict(), "color": int(m.color),
-                           "domain": int(m.domain), "vcpu": int(m.vcpu)}
+                           "domain": int(m.domain), "vcpu": int(m.vcpu),
+                           "level": str(m.level)}
                           for m in self.monitored],
         }
 
@@ -224,7 +235,8 @@ class VScan:
         monitored = [MonitoredSet(es=EvictionSet.from_state(m["es"]),
                                   color=int(m["color"]),
                                   domain=int(m["domain"]),
-                                  vcpu=int(m["vcpu"]))
+                                  vcpu=int(m["vcpu"]),
+                                  level=str(m.get("level", "llc")))
                      for m in state["monitored"]]
         vs = cls(vm, monitored, window_ms=float(state["default_window_ms"]),
                  ewma_alpha=float(state["ewma_alpha"]), use_batch=use_batch,
@@ -262,14 +274,16 @@ class VScan:
             self.vm.warm_timer()
             lat_lanes = self.vm.timed_access_batch(lanes, vcpu=vcpus)
             for i, lats in zip(order, lat_lanes):
-                frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
+                thr = miss_threshold(self.monitored[i].level)
+                frac[i] = float(np.mean(lats > thr))
         else:
             for vcpu, idxs in by_prober.items():
                 for i in idxs:
                     gvas = self.monitored[i].es.gvas[::-1]  # reverse order
                     self.vm.warm_timer()
                     lats = self.vm.timed_access(gvas, vcpu=vcpu)
-                    frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
+                    thr = miss_threshold(self.monitored[i].level)
+                    frac[i] = float(np.mean(lats > thr))
         return frac
 
     # -- plan emission (the ProbePlan route) -----------------------------------
@@ -284,9 +298,11 @@ class VScan:
             Segment(gvas=np.concatenate(
                 [self.monitored[i].es.gvas for i in idxs]), vcpu=vcpu)
             for vcpu, idxs in by_prober.items()))
+        levels = {self.monitored[i].level for i in order}
         probe = Measure(
             lanes=tuple(self.monitored[i].es.gvas[::-1] for i in order),
-            vcpus=tuple(self.monitored[i].vcpu for i in order))
+            vcpus=tuple(self.monitored[i].vcpu for i in order),
+            level=levels.pop() if len(levels) == 1 else "mixed")
         ops: Tuple = (prime,)
         if window_ms is not None:
             ops += (Wait(ms=window_ms),)
@@ -308,7 +324,8 @@ class VScan:
                          lat_lanes: List[np.ndarray]) -> np.ndarray:
         frac = np.zeros(len(self.monitored))
         for i, lats in zip(order, lat_lanes):
-            frac[i] = float(np.mean(lats > LLC_MISS_THRESHOLD))
+            thr = miss_threshold(self.monitored[i].level)
+            frac[i] = float(np.mean(lats > thr))
         return frac
 
     def apply_monitor(self, plan: ProbePlan,
@@ -515,11 +532,14 @@ class VScan:
     # Quarantined (flagged) sets are excluded: their EWMA is frozen drift
     # garbage.  A (domain, color) whose every set is quarantined simply
     # drops out of the dict until repaired — consumers already tolerate
-    # missing keys (CAP orders unmeasured colors last).
+    # missing keys (CAP orders unmeasured colors last).  The classic
+    # per-domain/per-color aggregates describe *LLC* contention only:
+    # L2-level monitored sets feed the per-level/per-core views below
+    # (the harvest tier's capacity sensors), never the CAS/CAP LLC rates.
     def per_domain_rate(self) -> Dict[int, float]:
         out: Dict[int, List[float]] = {}
         for i, m in enumerate(self.monitored):
-            if self.flagged[i]:
+            if self.flagged[i] or m.level != "llc":
                 continue
             out.setdefault(m.domain, []).append(self.ewma[i])
         return {d: float(np.mean(v)) for d, v in out.items()}
@@ -527,12 +547,63 @@ class VScan:
     def per_color_rate(self, domain: Optional[int] = None) -> Dict[int, float]:
         out: Dict[int, List[float]] = {}
         for i, m in enumerate(self.monitored):
-            if self.flagged[i]:
+            if self.flagged[i] or m.level != "llc":
                 continue
             if domain is not None and m.domain != domain:
                 continue
             out.setdefault(m.color, []).append(self.ewma[i])
         return {c: float(np.mean(v)) for c, v in out.items()}
+
+    def per_level_rate(self) -> Dict[str, float]:
+        """Mean live EWMA rate per monitored cache level — the signal
+        `check_drift`/`repair` use to rebuild only the level that broke,
+        and `ContentionView.per_level` publishes."""
+        out: Dict[str, List[float]] = {}
+        for i, m in enumerate(self.monitored):
+            if self.flagged[i]:
+                continue
+            out.setdefault(m.level, []).append(self.ewma[i])
+        return {lv: float(np.mean(v)) for lv, v in out.items()}
+
+    def l2_core_rate(self) -> Dict[int, float]:
+        """Per-core private-L2 eviction rate (live L2-level sets grouped by
+        the prober's core) — the harvest tier's quiet-L2 sensor."""
+        out: Dict[int, List[float]] = {}
+        for i, m in enumerate(self.monitored):
+            if self.flagged[i] or m.level != "l2":
+                continue
+            core = int(self.vm.vcpu_cores[m.vcpu])
+            out.setdefault(core, []).append(self.ewma[i])
+        return {c: float(np.mean(v)) for c, v in out.items()}
+
+    def l2_color_rate(self, core: Optional[int] = None) -> Dict[int, float]:
+        """Per-L2-color eviction rate over live L2-level sets (optionally
+        one core's) — ranks which L2 page colors are co-tenant-quiet."""
+        out: Dict[int, List[float]] = {}
+        for i, m in enumerate(self.monitored):
+            if self.flagged[i] or m.level != "l2":
+                continue
+            if (core is not None
+                    and int(self.vm.vcpu_cores[m.vcpu]) != core):
+                continue
+            out.setdefault(m.color, []).append(self.ewma[i])
+        return {c: float(np.mean(v)) for c, v in out.items()}
+
+    def add_sets(self, new: Sequence[MonitoredSet]) -> None:
+        """Append monitored sets (e.g. the L2-level sensors built after the
+        LLC population), growing every parallel per-set array — new slots
+        start live with zero EWMA/suspicion, exactly like freshly built
+        sets at construction."""
+        if not new:
+            return
+        n = len(new)
+        self.monitored.extend(new)
+        self.ewma = np.concatenate([self.ewma, np.zeros(n)])
+        self._suspect = np.concatenate([self._suspect,
+                                        np.zeros(n, np.int64)])
+        self.flagged = np.concatenate([self.flagged, np.zeros(n, bool)])
+        self.attack_flagged = np.concatenate([self.attack_flagged,
+                                              np.zeros(n, bool)])
 
     # -- validation (hypercall ground truth) ---------------------------------------
     def measured_row_coverage(self, vm: GuestVM, n_rows: int) -> float:
