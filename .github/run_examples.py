@@ -27,6 +27,7 @@ EXAMPLES = {
     "drift_repair.py": (["skylake_sp"], 420),
     "attack_defense.py": (["skylake_sp"], 600),
     "fleet_sim.py": (["skylake_sp"], 600),
+    "pod_monitor.py": ([], 420),
     "serve_batched.py": ([], 420),
     "train_100m.py": (["--steps", "4", "--ckpt", "/tmp/smoke-ckpt"], 600),
     "elastic_restart.py": ([], 600),

@@ -106,6 +106,7 @@ def main() -> None:
         ("tune", bench_paper_tables.bench_tune),
         ("attack", bench_paper_tables.bench_attack),
         ("hierarchy", bench_paper_tables.bench_hierarchy),
+        ("pod", bench_paper_tables.bench_pod),
         ("kernels", bench_system.bench_kernels),
         ("train", bench_system.bench_train_step),
         ("serve", bench_system.bench_serve_step),

@@ -1,0 +1,100 @@
+"""Pod backend demo: the same session API over a TPU-pod probing target.
+
+The paper probes a hypervisor-hidden LLC; a pod tenant faces the same
+asymmetry for effective VMEM, per-chip HBM bandwidth and per-axis ICI
+health.  This demo drives `CacheXSession.attach(backend="pod")` end to
+end against the deterministic `SimPod` host model:
+
+  1. attach with the pod backend and query `topology()` (mesh axes +
+     per-chip probed effective VMEM), `colors()` (VMEM/HBM arena zones)
+     and `contention()` (per-chip slowdowns, per-axis ICI health),
+  2. subscribe the LM-stack consumers — `ReplicaRouter` tiers,
+     `StragglerMitigator` microbatch plans, `ExpertRebalancer` — and
+     watch them act on published windows as one chip heats up,
+  3. export the probed abstraction, reprovision the pod (epoch bump) and
+     show the import is rejected as stale, then repaired,
+  4. run the closed loop (`run_pod_loop`) rebalance on vs off and print
+     the measured p99 decode latency / step time delta.
+
+    PYTHONPATH=src python examples/pod_monitor.py
+"""
+
+import numpy as np
+
+from repro.core import CacheXSession, StaleAbstractionError, TierTracker
+from repro.distributed.rebalance import ExpertRebalancer, StragglerMitigator
+from repro.tpuprobe.pod_backend import SimPod, run_pod_loop
+
+
+def main():
+    print("== CacheXSession on the pod backend ==\n")
+    pod = SimPod(mesh_shape={"data": 2, "model": 4}, seed=11,
+                 reserved_vmem=(3 << 20) + 12345,
+                 hbm_schedule=lambda chip, t: 2.5 if (chip == 5 and t > 30)
+                 else 1.0,
+                 link_schedule=lambda ax, hop, t: 1.8
+                 if (ax == "model" and hop == 1) else 1.0)
+    session = CacheXSession.attach(pod.slice(), "pod", backend="pod")
+
+    topo = session.topology()
+    vmem_mib = topo.effective_vmem[0] / (1 << 20)
+    print(f"topology: mesh {topo.axes} -> {topo.n_chips} chips; "
+          f"probed effective VMEM {vmem_mib:.2f} MiB/chip "
+          f"(nominal 16.00); axis slowdowns "
+          f"{ {a: round(s, 2) for a, s in topo.axis_slowdown.items()} }")
+    colors = session.colors()
+    print(f"colors:   {colors.n_zones} arena zones "
+          f"(chip 0: hbm={colors.zone_of(0, 'hbm')}, "
+          f"vmem={colors.zone_of(0, 'vmem')})")
+
+    tiers = TierTracker(keys=list(range(topo.n_chips)),
+                        thresholds=[1.15, 1.5])
+    mitigator = StragglerMitigator(topo.n_chips, total_microbatches=32)
+    experts = ExpertRebalancer(16, topo.n_chips, experts_per_device=2)
+    session.subscribe(tiers.on_contention)
+    session.subscribe(mitigator.on_contention)
+    session.subscribe(experts.on_contention)
+    experts.update_load(np.linspace(16, 1, 16))
+
+    print("\nwindow  chip5_ewma  tier5  microbatch_plan")
+    for _ in range(12):
+        view = session.refresh()
+        print(f"  #{view.interval:<4} {view.per_domain[5]:>9.2f} "
+              f"{tiers.tier[5]:>6}  {[int(x) for x in mitigator.plan]}")
+    print(f"expert re-placements after tier commit: "
+          f"{experts.rebalances} (moved {experts.moves} bindings)")
+
+    js = session.export_json()
+    pod.reprovision(reserved_vmem=5 << 20)
+    try:
+        CacheXSession.import_(pod.slice(), __import__("json").loads(js))
+        raise AssertionError("stale import must be rejected")
+    except StaleAbstractionError as e:
+        print(f"\nreprovisioned pod rejects the old export: "
+              f"{str(e).splitlines()[0][:60]}...")
+    from repro.tpuprobe.pod_backend import PodSession
+    stale = PodSession.import_json(pod.slice(), js, allow_stale=True)
+    rep = stale.repair()
+    new_mib = stale.topology().effective_vmem[0] / (1 << 20)
+    print(f"repair(): re-probed VMEM {vmem_mib:.2f} -> {new_mib:.2f} "
+          f"MiB/chip (epoch {rep['epoch']})")
+
+    print("\nclosed pod loop (probe -> tier -> reroute/rebalance -> "
+          "measure):")
+    on = run_pod_loop(rebalance="on", seed=0)
+    off = run_pod_loop(rebalance="off", seed=0)
+    print(f"  rebalance off: p99 decode {off.p99_decode_ms:.2f} ms, "
+          f"step {off.mean_step_s * 1e3:.2f} ms, "
+          f"hot-chip requests {100 * off.hot_request_frac:.0f}%")
+    print(f"  rebalance on:  p99 decode {on.p99_decode_ms:.2f} ms, "
+          f"step {on.mean_step_s * 1e3:.2f} ms, "
+          f"hot-chip requests {100 * on.hot_request_frac:.0f}% "
+          f"({on.rebalances} microbatch rebalances, "
+          f"{on.expert_moves} expert moves)")
+    assert on.p99_decode_ms < off.p99_decode_ms
+    assert on.mean_step_s < off.mean_step_s
+    print("  -> closed loop improves both (measured, not assumed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,13 @@ docs/ARCHITECTURE.md):
                compile-shape cache) + the measured lowering autotuner
                (`tune_lowering`: plan cutouts timed on scratch VMs;
                `plan_lowering()` becomes a default the tuner overrides)
+  backend      the probe-backend seam: ProbeTarget (the duck-typed
+               surface the ProbePlan executor lowers onto) + ProbeBackend
+               (attach/import_ construction) + the registry behind
+               `CacheXSession.attach(backend=...)` — "llc" is the classic
+               GuestVM path (bit-identical), "pod" lazily loads
+               `repro.tpuprobe.pod_backend` (SimPod host model, PodScan
+               monitor, the closed pod serving/training loop)
   abstraction  CacheXSession — the probed abstraction as a query API
                (topology/colors/contention + plan/execute + subscribe +
                epoch-stamped export/import + check_drift/repair +
@@ -60,6 +67,9 @@ from repro.core.abstraction import (CacheXSession, ColorsView,
                                     ContentionView, ProbeConfig,
                                     RepairReport, StaleAbstractionError,
                                     TopologyView, VSCAN_POOL_CAP_PAGES)
+from repro.core.backend import (LLCBackend, ProbeBackend, ProbeTarget,
+                                backend_for_format, get_backend,
+                                list_backends, register_backend)
 from repro.core.cap import (CapAllocator, CapStats, HarvestStats,
                             L2HarvestTier)
 from repro.core.cas import (TierTracker, allow_pull, policy_place,
@@ -97,8 +107,8 @@ __all__ = [
     "AttackSpec",
     "AttackerGuest",
     "CachePlatform",
-    "CacheXReport",
     "CacheShield",
+    "CacheXReport",
     "CacheXSession",
     "CapAllocator",
     "CapStats",
@@ -117,12 +127,15 @@ __all__ = [
     "HierarchySpec",
     "HostEvent",
     "L2HarvestTier",
+    "LLCBackend",
     "MonitoredSet",
     "PlanCost",
     "PlanLowering",
     "PlanResult",
+    "ProbeBackend",
     "ProbeConfig",
     "ProbePlan",
+    "ProbeTarget",
     "RepairReport",
     "SimHost",
     "StaleAbstractionError",
@@ -140,6 +153,7 @@ __all__ = [
     "attribute_levels",
     "attribute_residency",
     "attribution_accuracy",
+    "backend_for_format",
     "classify_trace",
     "clear_tune_cache",
     "color_accuracy",
@@ -147,14 +161,17 @@ __all__ = [
     "dataclass_csv_row",
     "directory_aliasing",
     "fig10_summary",
+    "get_backend",
     "get_platform",
     "harvest_summary",
     "l2_filter_reliable",
+    "list_backends",
     "list_platforms",
     "plan_cost",
     "policy_place",
     "probe_dispatch_count",
     "quiet_l2_colors",
+    "register_backend",
     "register_platform",
     "run_cachex",
     "run_fleet",

@@ -442,10 +442,22 @@ class CacheXSession:
     @classmethod
     def attach(cls, vm: GuestVM, platform: Union[str, CachePlatform],
                config: Optional[ProbeConfig] = None,
-               eager: bool = False) -> "CacheXSession":
+               eager: bool = False, backend: str = "llc"):
         """Bind a session to a booted VM.  ``eager=True`` runs the whole
         VEV→VCOL→VSCAN pipeline now; the default probes lazily on first
-        query (each stage still runs at most once)."""
+        query (each stage still runs at most once).
+
+        ``backend`` selects the probing target kind
+        (`repro.core.backend`): the default ``"llc"`` is this classic
+        GuestVM path, untouched — the dispatch below never runs for it.
+        Any other name resolves through the backend registry (e.g.
+        ``backend="pod"`` probes a TPU-pod tenant slice and returns a
+        `repro.tpuprobe.pod_backend.PodSession` serving the same query
+        surface)."""
+        if backend != "llc":
+            from repro.core.backend import get_backend
+            return get_backend(backend).attach(vm, platform, config=config,
+                                               eager=eager)
         session = cls(vm, platform, config)
         if eager:
             session.colors()
@@ -1155,6 +1167,13 @@ class CacheXSession:
         re-probing from scratch after a partial remap.  v1 snapshots
         (pre-epoch) import unchecked."""
         if data.get("format") not in _ACCEPTED_FORMATS:
+            # another backend's export (e.g. cachex-pod-abstraction/*):
+            # route it to the backend that wrote it
+            from repro.core.backend import backend_for_format
+            be = backend_for_format(data.get("format"))
+            if be is not None and cls is CacheXSession:
+                return be.import_(vm, data, config=config,
+                                  allow_stale=allow_stale)
             raise ValueError(f"not a {EXPORT_FORMAT} export: "
                              f"{data.get('format')!r}")
         snap_epoch = data.get("host_epoch")

@@ -93,8 +93,25 @@ class ColoredStagingPool:
         self.buf_bytes = buf_bytes
         self._backing: Dict = {}
 
+    @classmethod
+    def from_colors(cls, colors_view, bufs_per_zone: int = 16,
+                    buf_bytes: int = 1 << 20) -> "ColoredStagingPool":
+        """Build the pool over a session's probed zone map — e.g. the pod
+        session's ``PodColorsView`` VMEM/HBM arena zones (anything whose
+        ``build_free_lists(per_zone)`` returns zone → buffer handles)."""
+        pool = cls.__new__(cls)
+        pool.cap = CapAllocator(colors_view.build_free_lists(bufs_per_zone))
+        pool.buf_bytes = buf_bytes
+        pool._backing = {}
+        return pool
+
     def update_contention(self, per_zone_rate: Dict[int, float]) -> None:
         self.cap.step_interval(per_zone_rate)
+
+    def on_contention(self, view) -> None:
+        """`CacheXSession.subscribe` hook: follow the published per-color
+        (per-zone) contention instead of being hand-fed rates."""
+        self.update_contention(dict(view.per_color))
 
     def stage(self, arr: np.ndarray):
         """'Place' an array into a colored staging buffer (bookkeeping —

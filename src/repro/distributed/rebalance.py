@@ -16,8 +16,13 @@ domains.  On a pod the "tasks" are units of shardable work and the
   * **serve routing**: decode batches prefer replica groups in the best
     tier (serve/engine.py).
 
-All policies consume `tpuprobe.monitor.PodMonitor` tiers, i.e. the same
-TierTracker machinery as the faithful CAS reproduction.
+All policies now sit on the session's published abstraction — subscribe
+`StragglerMitigator.on_contention` / `ExpertRebalancer.on_contention` to
+a `CacheXSession.attach(backend="pod")` session and each published
+ContentionView (``per_domain`` = per-chip EWMA slowdown) drives one
+decision interval, exactly the way CAS's `TierTracker.on_contention`
+consumes the LLC session (docs/MIGRATION.md maps the old
+`tpuprobe.monitor.PodMonitor` polling calls to this).
 """
 
 from __future__ import annotations
@@ -127,3 +132,65 @@ class StragglerMitigator:
         """Modelled step wall time = max over devices of work x slowdown."""
         return float(np.max(self.plan * np.maximum(slowdown, 1.0))) * \
             per_microbatch_s
+
+    def on_contention(self, view) -> np.ndarray:
+        """`CacheXSession.subscribe` hook: one published ContentionView
+        (``per_domain`` = per-chip slowdown) is one decision interval."""
+        slow = np.array([float(view.per_domain.get(d, 1.0))
+                         for d in range(self.n_devices)])
+        return self.update(slow)
+
+
+class ExpertRebalancer:
+    """Session-driven MoE expert re-placement — the paper's task
+    migration, on the EP axis, with its hysteresis intact.
+
+    The binding only moves when the device `TierTracker` *commits* a tier
+    change (3 consecutive intervals by default): transient contention
+    shifts the pending counter, never the placement, so experts don't
+    bounce between chips (§4.1's anti-bouncing rule).  Router load is
+    EWMA-smoothed separately; load drift alone re-ranks experts *within*
+    the committed tier ordering only when a commit happens.
+    """
+
+    def __init__(self, n_experts: int, n_devices: int,
+                 experts_per_device: Optional[int] = None,
+                 thresholds: Sequence[float] = (1.15, 1.5),
+                 hysteresis: int = 3, ewma_alpha: float = 0.3):
+        if experts_per_device is None:
+            experts_per_device = max(1, n_experts // n_devices)
+        self.n_experts = n_experts
+        self.n_devices = n_devices
+        self.experts_per_device = experts_per_device
+        self.ewma_alpha = ewma_alpha
+        self.tiers = TierTracker(keys=list(range(n_devices)),
+                                 thresholds=list(thresholds),
+                                 hysteresis=hysteresis)
+        self.load = np.ones(n_experts)
+        self.placement = replace_experts(self.load, self.tiers.tier,
+                                         experts_per_device)
+        self._last_committed = dict(self.tiers.tier)
+        self.moves = 0
+        self.rebalances = 0
+
+    def update_load(self, expert_load: np.ndarray) -> None:
+        a = self.ewma_alpha
+        self.load = (1 - a) * self.load + a * np.asarray(expert_load, float)
+
+    def on_contention(self, view) -> ExpertPlacement:
+        """One published ContentionView = one tier interval; re-place only
+        after the tracker commits."""
+        committed = self.tiers.update(
+            {d: float(view.per_domain.get(d, 1.0))
+             for d in range(self.n_devices)})
+        if committed != self._last_committed:
+            proposal = replace_experts(self.load, committed,
+                                       self.experts_per_device)
+            moved = int(np.sum(proposal.expert_to_device
+                               != self.placement.expert_to_device))
+            if moved:
+                self.moves += moved
+                self.rebalances += 1
+                self.placement = proposal
+            self._last_committed = dict(committed)
+        return self.placement

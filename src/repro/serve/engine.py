@@ -38,7 +38,15 @@ class Request:
 
 
 class ReplicaRouter:
-    """CAS routing across model replicas (tier-preferred, least-loaded)."""
+    """CAS routing across model replicas (tier-preferred, least-loaded).
+
+    Every ``route()``/``assign()`` MUST be paired with a ``release()``/
+    ``complete()`` when the request finishes: the load counters are the
+    tie-breaker, and a counter that only ever grows degenerates into a
+    stale arrival count — a replica that has long since drained keeps
+    looking busy and stops being preferred.  ``assign``/``complete``
+    carry the pairing on the request itself so callers can't leak it.
+    """
 
     def __init__(self, n_replicas: int, tiers: Optional[TierTracker] = None):
         self.n = n_replicas
@@ -53,13 +61,31 @@ class ReplicaRouter:
         self.load[r] += 1
         return r
 
+    def assign(self, req: Request) -> int:
+        """Route ``req`` and record the binding on it (so ``complete``
+        can release the right replica)."""
+        req.replica = self.route()
+        return req.replica
+
     def release(self, r: int) -> None:
+        if self.load[r] <= 0:
+            raise ValueError(f"release of replica {r} with zero in-flight "
+                             f"load: unbalanced route/release pairing")
         self.load[r] -= 1
+
+    def complete(self, req: Request) -> None:
+        """Request finished: drop its replica's in-flight load.  Safe to
+        call on never-assigned requests (no-op)."""
+        if req.replica is None:
+            return
+        self.release(req.replica)
+        req.replica = None
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 8,
-                 max_len: int = 512, dtype=jnp.bfloat16):
+                 max_len: int = 512, dtype=jnp.bfloat16,
+                 router: Optional[ReplicaRouter] = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -67,10 +93,13 @@ class ServeEngine:
         self.dtype = dtype
         self.queue: deque = deque()
         self.done: List[Request] = []
+        self.router = router
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos, dtype))
 
     def submit(self, req: Request) -> None:
+        if self.router is not None and req.replica is None:
+            self.router.assign(req)
         self.queue.append(req)
 
     # -- one wave -----------------------------------------------------------------
@@ -102,6 +131,9 @@ class ServeEngine:
                     tokens[i, 0] = int(nxt[i])
             if all(len(r.out) >= r.max_new for r in wave):
                 break
+        if self.router is not None:
+            for r in wave:
+                self.router.complete(r)
         self.done.extend(wave)
 
     def run_until_drained(self, max_waves: int = 1000) -> List[Request]:

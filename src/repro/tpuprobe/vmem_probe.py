@@ -29,7 +29,14 @@ NOMINAL_VMEM = 16 * (1 << 20)
 
 
 def _tile_fits_tpu(tile_bytes: int) -> bool:
-    """Try compiling a triad with one tile of `tile_bytes` in VMEM."""
+    """Try compiling a triad with one tile of `tile_bytes` in VMEM.
+
+    Only compile/lowering rejections count as "doesn't fit": Mosaic's
+    over-budget error is an ``XlaRuntimeError`` (a ``RuntimeError``
+    subclass) and shape/BlockSpec rejections raise ``ValueError``.
+    Anything else (a typo'd kernel import, a bad argument) is a real bug
+    and must propagate instead of being misread as a tiny VMEM budget.
+    """
     from repro.kernels.cache_probe.kernel import triad
     rows = max(8, tile_bytes // 4 // 128)
     try:
@@ -38,31 +45,40 @@ def _tile_fits_tpu(tile_bytes: int) -> bool:
         jax.jit(lambda a, b, s: triad(a, b, s, block=rows)).lower(
             a, a, s).compile()
         return True
-    except Exception:
+    except (RuntimeError, ValueError):
         return False
 
 
 def probe_effective_vmem(reserved_model: Optional[int] = None,
                          lo: int = 1 << 20,
-                         hi: int = NOMINAL_VMEM) -> int:
+                         hi: int = NOMINAL_VMEM,
+                         align: int = 1 << 18) -> int:
     """Binary search the largest usable VMEM working set (bytes).
 
     `reserved_model`: injected hidden reservation for CPU validation; on
     TPU pass None and the Mosaic compiler is the oracle.
+
+    The search runs over multiples of ``align`` (default 256 KiB, the
+    tile quantum), so the returned budget is always tile-aligned and is
+    exactly the largest aligned size the oracle accepts — the old
+    midpoint search could terminate on an unaligned ``lo`` that callers
+    then fed straight into BlockSpec sizing.
     """
     if reserved_model is not None:
         oracle = lambda b: b <= NOMINAL_VMEM - reserved_model  # noqa: E731
     else:
         oracle = _tile_fits_tpu
-    if not oracle(lo):
+    lo_q = max(1, lo // align)
+    hi_q = hi // align
+    if hi_q < lo_q or not oracle(lo_q * align):
         return 0
-    while hi - lo > (1 << 18):       # 256 KiB resolution
-        mid = (lo + hi) // 2
-        if oracle(mid):
-            lo = mid
+    while lo_q < hi_q:
+        mid = (lo_q + hi_q + 1) // 2
+        if oracle(mid * align):
+            lo_q = mid
         else:
-            hi = mid
-    return lo
+            hi_q = mid - 1
+    return lo_q * align
 
 
 def pick_attention_blocks(effective_vmem: int, head_dim: int,

@@ -161,6 +161,30 @@ def test_attach_query_export_import_parity(name):
     assert view.interval == 1 and vm2.stat_passes > before
 
 
+def test_llc_backend_is_the_default_and_bit_identical():
+    """PR-9 guard: the backend seam must not move the LLC path.  The
+    default ``attach()`` and an explicit ``backend="llc"`` (registry
+    path) produce the same session type and, on identically-seeded VMs,
+    bit-identical exports."""
+    from repro.core import get_backend, list_backends
+
+    assert "llc" in list_backends()
+    assert get_backend("llc").name == "llc"
+    plat = get_platform(FAST_PLATFORM)
+
+    def probed_export(backend_kw):
+        host, vm = plat.make_host_vm(seed=77)
+        session = CacheXSession.attach(
+            vm, plat, ProbeConfig.for_platform(plat, seed=77), **backend_kw)
+        assert type(session) is CacheXSession
+        session.topology()
+        session.colors()
+        session.refresh()
+        return session.export_json()
+
+    assert probed_export({}) == probed_export({"backend": "llc"})
+
+
 def test_import_rejects_foreign_payload():
     plat = get_platform(FAST_PLATFORM)
     host, vm = plat.make_host_vm(seed=1)

@@ -1,0 +1,369 @@
+"""Pod backend: SimPod determinism, session parity with the LLC surface,
+plan cost/fusion, the rebalance/expert/router consumers, and the closed
+pod loop (probe → tier → reroute/rebalance → measured p99 + step time).
+
+Mirrors `test_abstraction.py`'s attach→query→export→import coverage on
+the pod target, plus the ISSUE-9 satellite regressions (`vmem_probe`
+except-narrowing + aligned search; `ReplicaRouter` release path).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CacheXSession, StaleAbstractionError, get_backend,
+                        list_backends, plan_cost)
+from repro.core.probeplan import execute, fuse, split_result
+from repro.tpuprobe.pod_backend import (NOMINAL_HBM_LAT, PodFleetSim,
+                                        PodScan, PodSession, SimPod,
+                                        apply_ici, apply_vmem,
+                                        degraded_hops, ici_plan,
+                                        run_pod_loop, vmem_plan)
+from repro.tpuprobe.vmem_probe import NOMINAL_VMEM, probe_effective_vmem
+
+
+def make_pod(**kw):
+    kw.setdefault("mesh_shape", {"data": 2, "model": 4})
+    kw.setdefault("seed", 7)
+    kw.setdefault("reserved_vmem", (3 << 20) + 12345)
+    return SimPod(**kw)
+
+
+# -- SimPod / PodSlice ----------------------------------------------------------
+
+
+def test_simpod_deterministic_under_fixed_seed():
+    def run():
+        pod = make_pod(hbm_schedule=lambda c, t: 1.0 + 0.2 * c)
+        s = PodSession.attach(pod.slice(), eager=True)
+        for _ in range(5):
+            s.refresh()
+        return s.export()
+
+    a, b = run(), run()
+    assert a == b
+    # a different seed perturbs the timer jitter stream
+    pod = make_pod(seed=8, hbm_schedule=lambda c, t: 1.0 + 0.2 * c)
+    s = PodSession.attach(pod.slice(), eager=True)
+    for _ in range(5):
+        s.refresh()
+    assert s.export()["scan"]["ewma"] != a["scan"]["ewma"]
+
+
+def test_slice_counts_probe_work():
+    pod = make_pod()
+    sl = pod.slice()
+    PodSession.attach(sl, eager=True)
+    assert sl.stat_dispatches > 0 and sl.stat_accesses > 0
+
+
+# -- the probes as plans --------------------------------------------------------
+
+
+def test_vmem_plan_matches_oracle_and_alignment():
+    pod = make_pod(reserved_vmem=(5 << 20) + 777)
+    plan = vmem_plan(range(pod.n_chips))
+    eff = apply_vmem(plan, execute(pod.slice(), plan))
+    align = plan.meta["align"]
+    expected = ((NOMINAL_VMEM - pod.reserved_vmem) // align) * align
+    assert set(eff) == set(range(pod.n_chips))
+    for budget in eff.values():
+        assert budget == expected
+        assert budget % align == 0
+        # maximal: one more quantum would exceed the hidden budget
+        assert budget + align > NOMINAL_VMEM - pod.reserved_vmem
+
+
+def test_vmem_plan_is_one_dispatch_per_vote():
+    plan = vmem_plan(range(8), votes=1)
+    assert plan.signature() == ("WarmTimer", "Vote[vmem]")
+    assert plan.n_dispatches == 1
+
+
+def test_ici_plan_isolates_degraded_hop():
+    pod = make_pod(link_schedule=lambda ax, hop, t: 2.0
+                   if (ax == "model" and hop == 2) else 1.0)
+    plan = ici_plan(pod.mesh_shape)
+    stats = apply_ici(plan, execute(pod.slice(), plan))
+    assert set(stats) == {"data", "model"}
+    assert stats["model"]["slowdown"] > stats["data"]["slowdown"]
+    assert degraded_hops(stats, "model", threshold=1.3) == [2]
+    assert degraded_hops(stats, "data", threshold=1.3) == []
+    # per-axis ops carry their axis as the level tag (PR 8 plumbing)
+    assert plan.signature() == ("WarmTimer", "Measure[ici_data]",
+                                "Measure[ici_model]")
+
+
+def test_pod_plans_cost_and_fuse():
+    pod = make_pod()
+    s = PodSession.attach(pod.slice())
+    plan = s.plan()
+    cost = plan_cost(plan)
+    assert cost.dispatches == plan.n_dispatches
+    fused, spans = fuse([plan, s.plan()])
+    res = split_result(execute(pod.slice(), fused), spans)
+    assert len(res) == 2
+    assert len(res[0].values[2]) == pod.n_chips
+
+
+# -- the monitor (PodScan) ------------------------------------------------------
+
+
+def test_podscan_tiers_commit_with_hysteresis():
+    pod = make_pod(hbm_schedule=lambda c, t: 2.0 if c == 3 else 1.0)
+    scan = PodScan(pod.slice(), ewma_alpha=1.0)
+    for i in range(4):
+        scan.monitor_once()
+        committed = scan.tiers.tier[3]
+        assert committed == (2 if i >= 2 else 0)   # 3-interval commit
+    assert scan.tiers.tier[0] == 0
+
+
+def test_podscan_quarantines_faulted_chip_and_confirms_clean():
+    state = {"broken": True}
+
+    def schedule(c, t):
+        return 8.0 if (c == 1 and state["broken"]) else 1.0
+
+    pod = make_pod(hbm_schedule=schedule)
+    s = PodSession.attach(pod.slice())
+    drifts = []
+    s.subscribe_drift(drifts.append)
+    for _ in range(3):
+        s.refresh()
+    scan = s.monitored_sets()
+    assert scan.flagged == {1}
+    assert len(drifts) == 1 and drifts[0].kind == "pod_chip"
+    assert drifts[0].set_indices == [1]
+    assert s.check_drift()["flagged"] == [1]
+    state["broken"] = False
+    s.refresh()
+    assert scan.confirm_clean([1]) == [1]
+    assert scan.flagged == set()
+
+
+# -- session surface parity -----------------------------------------------------
+
+
+def test_backend_registry_dispatch():
+    assert "llc" in list_backends() and "pod" in list_backends()
+    assert get_backend("pod").name == "pod"
+    with pytest.raises(KeyError):
+        get_backend("gpu")
+    pod = make_pod()
+    s = CacheXSession.attach(pod.slice(), "pod", backend="pod")
+    assert isinstance(s, PodSession)
+
+
+def test_pod_session_serves_the_session_surface():
+    pod = make_pod(hbm_schedule=lambda c, t: 1.0 + 0.1 * c)
+    s = CacheXSession.attach(pod.slice(), "pod", backend="pod", eager=True)
+    topo = s.topology()
+    assert topo.axes == pod.mesh_shape and topo.n_chips == 8
+    assert set(topo.effective_vmem) == set(range(8))
+    colors = s.colors()
+    assert colors.n_zones == 16
+    assert colors.chip_of(colors.zone_of(5, "vmem")) == 5
+    view = s.contention()
+    assert set(view.per_domain) == set(range(8))
+    assert set(view.per_color) == set(range(16))
+    assert "hbm" in view.per_level and "ici:model" in view.per_level
+    seen = []
+    tok = s.subscribe(seen.append)
+    s.refresh()
+    assert len(seen) == 1 and seen[0].interval > view.interval
+    s.unsubscribe(tok)
+    s.refresh()
+    assert len(seen) == 1
+    assert s.validate()["vmem_ok"] and s.validate()["link_ok"]
+
+
+def test_pod_export_import_roundtrip_and_staleness():
+    pod = make_pod()
+    s = PodSession.attach(pod.slice(), eager=True)
+    for _ in range(3):
+        s.refresh()
+    js = s.export_json()
+    data = json.loads(js)
+    assert data["format"] == "cachex-pod-abstraction/v1"
+
+    # restore on a fresh slice: no re-probe, identical answers
+    s2 = PodSession.import_json(pod.slice(), js)
+    assert s2.topology().effective_vmem == s.topology().effective_vmem
+    assert s2.export() == s.export()
+    # CacheXSession.import_ routes pod-format snapshots to the backend
+    s3 = CacheXSession.import_(pod.slice(), data)
+    assert isinstance(s3, PodSession)
+
+    # reprovisioning bumps the pod epoch -> snapshot is stale
+    pod.reprovision(reserved_vmem=6 << 20)
+    with pytest.raises(StaleAbstractionError):
+        PodSession.import_json(pod.slice(), js)
+    s4 = PodSession.import_json(pod.slice(), js, allow_stale=True)
+    rep = s4.repair()
+    assert rep["epoch"] == s4.epoch and rep["vmem_changed"]
+    assert s4.validate()["vmem_ok"]
+
+
+def test_llc_import_still_rejects_garbage():
+    from repro.core import get_platform
+    plat = get_platform("skylake_sp")
+    _host, vm = plat.make_host_vm(seed=0, with_noise=False)
+    with pytest.raises(ValueError):
+        CacheXSession.import_(vm, {"format": "not-a-format"})
+
+
+# -- seed consumers on the session ---------------------------------------------
+
+
+def test_expert_rebalancer_moves_only_after_tier_commit():
+    from repro.distributed.rebalance import ExpertRebalancer
+    from repro.core.abstraction import ContentionView
+
+    def view(rates):
+        return ContentionView(per_domain=rates, per_color={}, mean_rate=0.0,
+                              window_ms=10.0, measured_at_ms=0.0, interval=0)
+
+    reb = ExpertRebalancer(8, 4, experts_per_device=2,
+                           thresholds=(1.15, 1.5))
+    reb.update_load(np.array([8, 7, 6, 5, 4, 3, 2, 1], float))
+    before = reb.placement.expert_to_device.copy()
+    hot = {0: 1.0, 1: 1.0, 2: 2.0, 3: 1.0}
+    for _ in range(2):
+        reb.on_contention(view(hot))
+        assert np.array_equal(reb.placement.expert_to_device, before)
+        assert reb.moves == 0
+    reb.on_contention(view(hot))           # third interval: tier commits
+    assert reb.moves > 0 and reb.rebalances == 1
+    # the heaviest expert no longer sits on the contended device
+    heaviest = int(np.argmax(reb.load))
+    assert reb.placement.expert_to_device[heaviest] != 2
+
+
+def test_straggler_mitigator_consumes_contention_views():
+    from repro.distributed.rebalance import StragglerMitigator
+    from repro.core.abstraction import ContentionView
+    m = StragglerMitigator(4, 16)
+    v = ContentionView(per_domain={0: 1.0, 1: 1.0, 2: 3.0, 3: 1.0},
+                       per_color={}, mean_rate=0.0, window_ms=10.0,
+                       measured_at_ms=0.0, interval=0)
+    for _ in range(3):
+        plan = m.on_contention(v)
+    assert plan[2] < plan[0] and plan.sum() == 16
+
+
+def test_staging_pool_follows_pod_colors():
+    from repro.data.pipeline import ColoredStagingPool
+    pod = make_pod(hbm_schedule=lambda c, t: 3.0 if c == 0 else 1.0)
+    s = PodSession.attach(pod.slice(), eager=True)
+    pool = ColoredStagingPool.from_colors(s.colors(), bufs_per_zone=2)
+    assert set(pool.cap.free_lists) == set(range(16))
+    s.subscribe(pool.on_contention)
+    for _ in range(4):
+        s.refresh()
+    h = pool.stage(np.zeros(4))
+    # CAP places staging in the hottest zone: chip 0's HBM arena (zone 0)
+    assert h[0] == s.colors().zone_of(0, "hbm")
+    pool.release(h)
+
+
+# -- ReplicaRouter release path (satellite regression) --------------------------
+
+
+def test_router_drained_replica_becomes_routable_again():
+    from repro.serve.engine import ReplicaRouter, Request
+    r = ReplicaRouter(2)
+    reqs = [Request(rid=i, prompt=np.zeros(1, np.int32)) for i in range(4)]
+    for q in reqs:
+        r.assign(q)
+    assert list(r.load) == [2, 2]
+    # drain replica 0 only: it must become the preferred target again
+    for q in reqs:
+        if q.replica == 0:
+            r.complete(q)
+    assert list(r.load) == [0, 2]
+    assert r.route() == 0
+    # completion is idempotent per request; double-release is an error
+    assert reqs[0].replica is None
+    r.complete(reqs[0])                     # no-op
+    with pytest.raises(ValueError):
+        r.release(0)
+        r.release(0)
+        r.release(0)
+
+
+def test_serve_engine_releases_router_load():
+    from repro.core.cas import TierTracker
+    from repro.serve.engine import ReplicaRouter, Request, ServeEngine
+    from repro.configs.base import get_config, reduced_config
+    from repro.models import lm
+    import jax
+    cfg = reduced_config(get_config("qwen1p5_0p5b"))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    router = ReplicaRouter(2, tiers=TierTracker(keys=[0, 1]))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=16,
+                      router=router)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.array([1, 2], np.int32),
+                           max_new=2))
+    assert router.load.sum() == 3
+    eng.run_until_drained()
+    assert list(router.load) == [0, 0]
+
+
+# -- vmem_probe satellite regression --------------------------------------------
+
+
+def test_probe_effective_vmem_alignment_and_maximality():
+    align = 1 << 18
+    for reserved in (2 << 20, (3 << 20) + 1, (6 << 20) + align - 1):
+        eff = probe_effective_vmem(reserved_model=reserved)
+        true_budget = NOMINAL_VMEM - reserved
+        assert eff % align == 0
+        assert eff <= true_budget           # never over-claims
+        assert eff + align > true_budget    # largest aligned fit
+    assert probe_effective_vmem(reserved_model=NOMINAL_VMEM) == 0
+
+
+def test_tile_fits_narrowed_except(monkeypatch):
+    """Real bugs must propagate; only compile rejections mean "no fit"."""
+    import repro.kernels.cache_probe.kernel as kmod
+    from repro.tpuprobe.vmem_probe import _tile_fits_tpu
+
+    def boom(*a, **kw):
+        raise TypeError("a real bug, not an over-budget tile")
+
+    monkeypatch.setattr(kmod, "triad", boom)
+    with pytest.raises(TypeError):
+        _tile_fits_tpu(1 << 20)
+
+    def over_budget(*a, **kw):
+        raise ValueError("tile does not fit")
+
+    monkeypatch.setattr(kmod, "triad", over_budget)
+    assert _tile_fits_tpu(1 << 20) is False
+
+
+# -- the closed pod loop --------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_closed_loop_rebalance_improves_p99_and_step_time():
+    on = run_pod_loop(rebalance="on", seed=0)
+    off = run_pod_loop(rebalance="off", seed=0)
+    assert on.requests == off.requests > 0
+    assert on.p99_decode_ms < off.p99_decode_ms
+    assert on.mean_step_s < off.mean_step_s
+    assert on.rebalances > 0 and on.expert_moves > 0
+    assert off.rebalances == 0 and off.expert_moves == 0
+    # routing actually avoided the hot chip after tier commit
+    assert on.hot_request_frac < off.hot_request_frac
+
+
+def test_closed_loop_router_prefers_quiet_tier_e2e():
+    sim = PodFleetSim(intervals=12, warmup=6, rebalance="on")
+    report = sim.run()
+    assert report.hot_request_frac == 0.0
+    assert sim.router.tiers.tier[sim.hot_chip] > 0
+    assert list(sim.router.load) == [0] * sim.pod.n_chips   # all released
