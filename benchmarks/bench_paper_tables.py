@@ -26,6 +26,11 @@ tune     — ProbePlan cost model + lowering autotuner: model-vs-measured
 hierarchy — per-level (L2/LLC/DRAM) attribution vs the hypercall oracle
            on both inclusion variants + the CAP L2-harvest fleet loop
            (residual ws latency on vs off); writes bench-hierarchy.csv
+scale    — rack-scale co-execution: ShardedFleet guest sweep (donor-cloned
+           boots, plancost-chosen shard size, sharded lockstep dispatch)
+           vs a sequential one-guest-at-a-time extrapolation, plus the
+           ServingGuest p99 placement-on/off comparison; writes
+           bench-scale.csv
 """
 
 from __future__ import annotations
@@ -834,6 +839,113 @@ def bench_pod():
     emit("pod.report_csv", 0.0, f"path={path};rows={len(reports)}")
 
 
+def bench_scale():
+    """Rack-scale fleet co-execution (`--only scale`).
+
+    One sequential baseline (the pre-rack path: each guest booted and
+    run alone, at the platform's ScaleSpec loop sizing) extrapolated to
+    the sweep sizes, then a `ShardedFleet` run per SCALE_GUESTS entry:
+    donor-cloned boots, a plancost-scored shard size, and sharded
+    lockstep dispatch.  Acceptance (CI greps the booleans):
+    sublinear=True — the largest fleet's wall is under half its
+    sequential extrapolation — and every sweep row carries
+    guests_per_sec.  Also runs the ServingGuest workload with CAS
+    placement on vs off on two platforms (p99 must drop when the
+    router's tiers ride the published ContentionViews).  Env knobs:
+    SCALE_PLATFORM (default skylake_sp), SCALE_GUESTS (default
+    "4,16,64,256").  Writes bench-scale.csv.
+    """
+    import os
+    import time as _time
+
+    from repro.core.fleet import FleetSim, ShardedFleet
+    from repro.core.platforms import get_platform
+
+    plat_name = os.environ.get("SCALE_PLATFORM", "skylake_sp")
+    guests = sorted({int(g) for g in
+                     os.environ.get("SCALE_GUESTS", "4,16,64,256").split(",")
+                     if g})
+    plat = get_platform(plat_name)
+    spec = plat.scale
+    loop = dict(n_intervals=spec.n_intervals, warmup=spec.warmup,
+                stream_len=spec.stream_len, ws_pages=spec.ws_pages)
+
+    # sequential extrapolation baseline: one guest booted + run at a time,
+    # identical loop sizing to the sharded sweep (a fair wall comparison)
+    base_n = guests[0]
+    t0 = _time.perf_counter()
+    for i in range(base_n):
+        FleetSim(plat, policy="cas", cap="on", seed=i, **loop).run()
+    seq_wall = _time.perf_counter() - t0
+    seq_per_guest = seq_wall / base_n
+    emit(f"scale.sequential_baseline.{plat_name}",
+         seq_per_guest * 1e6,
+         f"n={base_n};wall_s={seq_wall:.2f};"
+         f"per_guest_s={seq_per_guest:.3f};"
+         f"guests_per_sec={base_n / seq_wall:.3f}")
+
+    results = []
+    for n in guests:
+        res = ShardedFleet(plat_name, n, seed=0).run()
+        results.append(res)
+        speedup = seq_per_guest / (res.wall_s / n)
+        emit(f"scale.sharded.{plat_name}.{n}", res.wall_s / n * 1e6,
+             f"shard={res.shard_size};n_shards={res.n_shards};"
+             f"boot_s={res.boot_s:.2f};run_s={res.run_s:.2f};"
+             f"wall_s={res.wall_s:.2f};"
+             f"guests_per_sec={res.guests_per_sec:.3f};"
+             f"speedup_vs_sequential={speedup:.2f}x")
+        record(f"fleet_guests_per_sec.{plat_name}.{n}",
+               round(res.guests_per_sec, 3),
+               f"{n} co-executed guests (shard={res.shard_size}), wall "
+               f"{res.wall_s:.1f}s vs {seq_per_guest * n:.1f}s sequential "
+               f"extrapolation; `--only scale`")
+
+    top = results[-1]
+    extrapolated = seq_per_guest * top.n_guests
+    sublinear = top.wall_s < 0.5 * extrapolated
+    beats_sequential = top.guests_per_sec > base_n / seq_wall
+    emit("scale.headline", 0.0,
+         f"n={top.n_guests};wall_s={top.wall_s:.1f};"
+         f"sequential_extrapolation_s={extrapolated:.1f};"
+         f"speedup={extrapolated / max(top.wall_s, 1e-9):.1f}x;"
+         f"sublinear={sublinear};beats_sequential={beats_sequential};"
+         f"target=sublinear_True")
+
+    # the serving workload: CAS placement on vs off moves request p99
+    for sp in ("skylake_sp", "milan_ccx"):
+        p = get_platform(sp)
+        kw = dict(policy="cas", cap="on", seed=3, serving=True,
+                  n_intervals=p.scale.n_intervals, warmup=p.scale.warmup,
+                  stream_len=p.scale.stream_len, ws_pages=p.scale.ws_pages)
+        on = FleetSim(p, serving_placement=True, **kw).run()
+        off = FleetSim(p, serving_placement=False, **kw).run()
+        emit(f"scale.serving.{sp}", 0.0,
+             f"p99_on_ms={on.serve_p99_ms:.2f};"
+             f"p99_off_ms={off.serve_p99_ms:.2f};"
+             f"p50_on_ms={on.serve_p50_ms:.2f};"
+             f"p50_off_ms={off.serve_p50_ms:.2f};"
+             f"requests={on.serve_requests};"
+             f"placement_improves={on.serve_p99_ms < off.serve_p99_ms}")
+        record(f"fleet_serve_p99_ms.{sp}.placement_on",
+               round(on.serve_p99_ms, 3),
+               f"ServingGuest p99 {off.serve_p99_ms:.1f}ms (placement off) "
+               f"-> {on.serve_p99_ms:.1f}ms with tier-fed routing; "
+               f"`--only scale`")
+
+    path = "bench-scale.csv"
+    with open(path, "w") as f:
+        f.write("platform,n_guests,shard_size,n_shards,n_devices,boot_s,"
+                "run_s,wall_s,guests_per_sec,wall_per_guest_s\n")
+        for r in results:
+            f.write(f"{r.platform},{r.n_guests},{r.shard_size},"
+                    f"{r.n_shards},{r.n_devices},{r.boot_s:.2f},"
+                    f"{r.run_s:.2f},{r.wall_s:.2f},"
+                    f"{r.guests_per_sec:.3f},"
+                    f"{r.wall_s / r.n_guests:.4f}\n")
+    emit("scale.report_csv", 0.0, f"path={path};rows={len(results)}")
+
+
 def run_all():
     bench_table2_eviction_construction()
     bench_table3_associativity()
@@ -852,3 +964,4 @@ def run_all():
     bench_attack()
     bench_hierarchy()
     bench_pod()
+    bench_scale()

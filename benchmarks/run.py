@@ -107,6 +107,7 @@ def main() -> None:
         ("attack", bench_paper_tables.bench_attack),
         ("hierarchy", bench_paper_tables.bench_hierarchy),
         ("pod", bench_paper_tables.bench_pod),
+        ("scale", bench_paper_tables.bench_scale),
         ("kernels", bench_system.bench_kernels),
         ("train", bench_system.bench_train_step),
         ("serve", bench_system.bench_serve_step),

@@ -60,7 +60,16 @@ docs/ARCHITECTURE.md):
                private-L2 capacity
   runner       run_cachex: one-shot report-builder over a session
   fleet        closed-loop fleet simulator: probe→decide→act→measure
-               (Fig 10 / Tables 7-8 analogs via `run_fleet_matrix`)
+               (Fig 10 / Tables 7-8 analogs via `run_fleet_matrix`) +
+               rack-scale co-execution (`ShardedFleet`: donor-cloned
+               guests, sharded lockstep dispatch, a serve-engine
+               `ServingGuest` whose router rides published views)
+  fleetshard   rack-scale machinery behind ShardedFleet: `choose_shard`
+               (plancost-scored guest-shard sizing), `device_groups`
+               (shards round-robined over local devices, batched-vmap
+               fallback on one), and the streaming metrics the fleet
+               keeps instead of per-interval histories (running means,
+               EWMA, P² quantile sketches, bounded ring windows)
 """
 
 from repro.core.abstraction import (CacheXSession, ColorsView,
@@ -76,9 +85,14 @@ from repro.core.cas import (TierTracker, allow_pull, policy_place,
                             select_vcpu)
 from repro.core.color import VCOL, ColorFilters, color_accuracy
 from repro.core.eviction import VEV, EvictionSet
-from repro.core.fleet import (FleetReport, FleetSim, FleetWorkload,
+from repro.core.fleet import (FleetReport, FleetScaleResult, FleetSim,
+                              FleetWorkload, ServingGuest, ShardedFleet,
                               fig10_summary, harvest_summary, run_fleet,
                               run_fleet_matrix, speedup_summary)
+from repro.core.fleetshard import (EWMA, FleetMetrics, P2Quantile,
+                                   RingWindow, ShardChoice, StreamingMean,
+                                   choose_shard, clear_shard_cache,
+                                   device_groups)
 from repro.core.hierarchy import (HierarchySpec, attribute_levels,
                                   attribute_residency, attribution_accuracy,
                                   directory_aliasing, l2_filter_reliable,
@@ -90,7 +104,7 @@ from repro.core.plancost import (PlanCost, TuneReport, clear_tune_cache,
 from repro.core.attacker import (AttackerGuest, AttackObservation,
                                  AttackReport, attack_gen)
 from repro.core.platforms import (AttackSpec, CachePlatform, DriftSpec,
-                                  all_platforms, get_platform,
+                                  ScaleSpec, all_platforms, get_platform,
                                   list_platforms, register_platform)
 from repro.core.shield import (AttackSignal, CacheShield, WindowVerdict,
                                classify_trace)
@@ -118,8 +132,11 @@ __all__ = [
     "CotenantWorkload",
     "DriftSignal",
     "DriftSpec",
+    "EWMA",
     "EvictionSet",
+    "FleetMetrics",
     "FleetReport",
+    "FleetScaleResult",
     "FleetSim",
     "FleetWorkload",
     "GuestVM",
@@ -129,6 +146,7 @@ __all__ = [
     "L2HarvestTier",
     "LLCBackend",
     "MonitoredSet",
+    "P2Quantile",
     "PlanCost",
     "PlanLowering",
     "PlanResult",
@@ -137,8 +155,14 @@ __all__ = [
     "ProbePlan",
     "ProbeTarget",
     "RepairReport",
+    "RingWindow",
+    "ScaleSpec",
+    "ServingGuest",
+    "ShardChoice",
+    "ShardedFleet",
     "SimHost",
     "StaleAbstractionError",
+    "StreamingMean",
     "TierTracker",
     "TopologyView",
     "TuneReport",
@@ -154,11 +178,14 @@ __all__ = [
     "attribute_residency",
     "attribution_accuracy",
     "backend_for_format",
+    "choose_shard",
     "classify_trace",
+    "clear_shard_cache",
     "clear_tune_cache",
     "color_accuracy",
     "dataclass_csv_header",
     "dataclass_csv_row",
+    "device_groups",
     "directory_aliasing",
     "fig10_summary",
     "get_backend",

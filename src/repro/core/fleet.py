@@ -66,8 +66,11 @@ from repro.core.attacker import AttackerGuest
 from repro.core.cachesim import BLOCKS_PER_PAGE, LAT_L2
 from repro.core.cap import CapAllocator, L2HarvestTier
 from repro.core.cas import TierTracker, policy_place
+from repro.core.fleetshard import (FleetMetrics, P2Quantile, ResidencyPhases,
+                                   choose_shard, device_groups, on_device)
 from repro.core.host_model import (CotenantWorkload, HostEvent,
-                                   congruent_gen, polluter_gen)
+                                   congruent_gen, polluter_gen,
+                                   shard_slices)
 from repro.core.platforms import (AttackSpec, CachePlatform, DriftSpec,
                                   get_platform)
 from repro.core import probeplan
@@ -204,6 +207,17 @@ class FleetReport:
                          counters, and the mean measured per-core L2 rates
                          of the sensitive task's (thrashed) core vs the
                          chosen harvest core.
+    ``guests_per_sec``   fleet throughput: guests completed per wall
+                         second.  Standalone runs report ``1 / wall_s``;
+                         co-executed runs (`_run_lockstep` /
+                         :class:`ShardedFleet`) stamp the *fleet-level*
+                         rate ``n_guests / fleet_wall`` on every report —
+                         the scaling-curve metric BENCH records.
+    ``serve_*``          serving-guest accounting (``serving=True`` runs
+                         only): requests routed post-warmup and the
+                         p50/p99 request latency (ms, P² sketches) the
+                         :class:`ServingGuest`'s router achieved — CAS
+                         placement shows up here as a p99 drop.
     """
 
     platform: str
@@ -244,6 +258,10 @@ class FleetReport:
     harvest_promotions: int = 0
     l2_hot_rate: float = 0.0
     l2_quiet_rate: float = 0.0
+    guests_per_sec: float = 0.0
+    serve_requests: int = 0
+    serve_p50_ms: float = 0.0
+    serve_p99_ms: float = 0.0
 
     @classmethod
     def csv_header(cls) -> str:
@@ -252,6 +270,73 @@ class FleetReport:
 
     def csv_row(self) -> str:
         return dataclass_csv_row(self)
+
+
+class ServingGuest:
+    """`repro.serve.engine` Request stream as a fleet guest workload.
+
+    Closes the serving loop on the LLC side (paper §4.1's CAS-TPU
+    routing, driven by the *measured* abstraction): each monitoring
+    interval the guest issues a burst of decode requests and routes them
+    across per-domain model replicas with the serve engine's
+    :class:`~repro.serve.engine.ReplicaRouter` — one replica per LLC
+    domain, so "route to the least-contended replica" is exactly a CAS
+    placement decision.  Decisions come from measurement: the router's
+    tier tracker is `CacheXSession.subscribe`'d to the published
+    ContentionViews (``placement=True``; off = the tiers never learn and
+    the router degenerates to least-loaded spreading, which keeps landing
+    requests on the polluted domain).  Outcomes come from ground truth:
+    each request's decode latency is charged from the fleet kernel's
+    per-domain contention (`fleet_interval_progress`'s second return) at
+    the replica it actually ran on — ``tokens x base_ms x (1 + sens x
+    contention[domain])`` — so a router that measures well moves the p99,
+    not just a synthetic IPC index.  Latencies stream into P² sketches
+    (`~repro.core.fleetshard.P2Quantile`): O(1) memory at any request
+    rate, the same posture as the fleet's other streaming metrics."""
+
+    def __init__(self, n_domains: int, thresholds: Sequence[float],
+                 placement: bool = True, rate: int = 6, tokens: int = 16,
+                 base_ms: float = 1.0, sensitivity: float = 2.0,
+                 seed: int = 0):
+        from repro.serve.engine import ReplicaRouter
+        self.router = ReplicaRouter(
+            n_domains, tiers=TierTracker(keys=list(range(n_domains)),
+                                         thresholds=list(thresholds)))
+        self.placement = placement
+        self.rate = int(rate)
+        self.tokens = int(tokens)
+        self.base_ms = float(base_ms)
+        self.sens = float(sensitivity)
+        self.rng = np.random.default_rng(seed + 0x5E12)
+        self.p50 = P2Quantile(0.50)
+        self.p99 = P2Quantile(0.99)
+        self.requests = 0
+        self._rid = 0
+
+    def step(self, cont: np.ndarray) -> None:
+        """One interval of request traffic: route ``rate`` requests, then
+        charge each its replica-domain's ground-truth decode latency for
+        this interval (``cont`` is the kernel's per-domain mean contention
+        index).  Requests are assigned before any completes — the burst is
+        in flight together, so the router's load tie-breaker spreads it —
+        and completed at interval end (decode finishes within the
+        window)."""
+        from repro.serve.engine import Request
+        reqs = []
+        for _ in range(self.rate):
+            req = Request(rid=self._rid, prompt=np.zeros(4, np.int32),
+                          max_new=self.tokens
+                          + int(self.rng.integers(0, self.tokens // 2 + 1)))
+            self._rid += 1
+            self.router.assign(req)
+            reqs.append(req)
+        for req in reqs:
+            lat = (req.max_new * self.base_ms
+                   * (1.0 + self.sens * float(cont[req.replica])))
+            self.p50.add(lat)
+            self.p99.add(lat)
+            self.requests += 1
+            self.router.complete(req)
 
 
 class FleetSim:
@@ -270,7 +355,24 @@ class FleetSim:
                  attack: Union[bool, AttackSpec] = False,
                  defend: bool = True, with_poisoner: bool = True,
                  harvest: Optional[str] = None,
-                 harvest_threshold: float = 0.25):
+                 harvest_threshold: float = 0.25,
+                 keep_history: bool = False,
+                 sim_seed: Optional[int] = None,
+                 session_import: Optional[Dict] = None,
+                 page_pool: Optional[Sequence[int]] = None,
+                 serving: bool = False, serving_placement: bool = True,
+                 serving_rate: int = 6):
+        # keep_history materializes the per-interval metric series (the
+        # pre-scale behaviour) for timeline consumers and parity tests;
+        # off (the default) the sim streams — O(series) floats per run,
+        # independent of n_intervals.  sim_seed diversifies a guest's
+        # *simulation* randomness (placement wakeup order, serving
+        # arrivals) without changing the boot seed — `ShardedFleet`
+        # clones share one boot (identical hosts, one exported
+        # abstraction) but must not move in lockstep as a policy input.
+        # session_import boots from an exported abstraction (zero
+        # re-probing; the donor's page_pool rides along so the colored
+        # free lists come straight from the imported page colors).
         if policy not in FLEET_POLICIES:
             raise ValueError(f"policy must be one of {FLEET_POLICIES}")
         if harvest not in (None, "off", "on"):
@@ -280,7 +382,10 @@ class FleetSim:
         self.plat = fleet_view(plat0, len(self.tasks))
         self.policy = policy
         self.cap_on = (cap == "on")
-        self.seed = seed
+        self.seed = seed if sim_seed is None else sim_seed
+        self.boot_seed = seed
+        self.keep_history = keep_history
+        self.metrics = FleetMetrics(keep_history=keep_history)
         self.use_batch = use_batch
         # use_plans drives every per-interval probe through ProbePlan
         # programs (`steps()` yields them; `run_fleet_matrix` co-executes
@@ -296,7 +401,7 @@ class FleetSim:
         self.ticks = ticks_per_interval
         self.stream_len = stream_len
         self.n_ws_pages = ws_pages
-        self.rng = np.random.default_rng(seed + 99)
+        self.rng = np.random.default_rng(self.seed + 99)
 
         self.host, self.vm = self.plat.make_host_vm(seed=seed)
         self.vcpu_domain = {v: c // self.plat.cores_per_domain
@@ -313,7 +418,18 @@ class FleetSim:
             n_cores = self.plat.n_domains * self.plat.cores_per_domain
             cfg = dataclasses.replace(
                 cfg, l2_monitor_cores=tuple(range(n_cores)))
-        self.session = CacheXSession.attach(self.vm, self.plat, cfg)
+        if session_import is not None:
+            # boot from a donor guest's exported abstraction: same boot
+            # seed => identical host backing, so colors / monitored sets
+            # import with zero re-probing (`ShardedFleet`'s O(1)-per-guest
+            # construction).  import_ resolves the registry platform;
+            # re-widen it to the fleet view so domain_vcpus spans the
+            # fleet topology exactly like the attach path.
+            self.session = CacheXSession.import_(self.vm, session_import,
+                                                 config=cfg)
+            self.session.platform = self.plat
+        else:
+            self.session = CacheXSession.attach(self.vm, self.plat, cfg)
         self.lowering = self.session.config.lowering
         self.colors = self.session.colors()          # VCOL color filters
         self.session.monitored_sets()                # VSCAN monitor build
@@ -366,14 +482,34 @@ class FleetSim:
         self.stat_defenses = 0
         self.stat_false_drift = 0
         self._detect_interval = -1
-        self._resid_hist: List[Tuple[int, int]] = []   # (interval, in_quiet)
+        # streaming pre/during/post residency (replaces the materialized
+        # (interval, in_quiet) history list): classified online, O(1)
+        # memory with the shipped AttackSpecs
+        self._resid: Optional[ResidencyPhases] = None
         if self.attack_spec is not None:
+            self._resid = ResidencyPhases(
+                warmup=warmup, start=self.attack_spec.start_interval,
+                stop=self.attack_spec.stop_interval,
+                n_intervals=n_intervals, defend=defend)
             self.attacker = AttackerGuest(self.host, self.plat, seed=seed)
             self.session.subscribe_attack(self._on_attack_signal)
 
         if ((self.drift_specs or self.attack_spec is not None)
                 and self.repair_on_drift):
             self.session.subscribe_drift(self._on_drift_signal)
+
+        # -- serving guest: serve-engine Request stream as a workload --------
+        # placement=True subscribes the router's tiers to the session's
+        # published views (the decide edge); placement=False keeps the
+        # tiers blind — the on-vs-off p99 delta isolates CAS routing.
+        self.serving: Optional[ServingGuest] = None
+        if serving:
+            self.serving = ServingGuest(
+                n_domains=self.plat.n_domains, thresholds=thresholds,
+                placement=serving_placement, rate=serving_rate,
+                seed=self.seed)
+            if serving_placement:
+                self.session.subscribe(self.serving.router.on_contention)
 
         # -- asymmetric contention (Fig 10): pollute domain 0 ---------------
         llc = self.plat.llc
@@ -384,6 +520,7 @@ class FleetSim:
 
         self.harvest_mode = harvest
         self.harvest_on = harvest == "on"
+        self._page_pool = list(page_pool) if page_pool is not None else None
         self._setup_page_cache()
 
         # -- the fleet: every workload born on the polluted domain ----------
@@ -455,6 +592,17 @@ class FleetSim:
         self.lowering = report.chosen
         return report
 
+    def install_lowering(self, lowering: probeplan.PlanLowering) -> None:
+        """Install an explicit lowering for every plan this sim yields —
+        the sim's own traverse/ws_lat plans *and* the session's monitor
+        plans (the same wiring ``tuned_lowering`` uses).  `ShardedFleet`
+        threads the chosen ``shard_size`` through here so the whole
+        co-running group dispatches in reused-shape guest shards."""
+        self.lowering = lowering
+        self.session.config = self.session.config.replace(lowering=lowering)
+        if self.session._vs is not None:
+            self.session._vs.lowering = lowering
+
     # ------------------------------------------------------------------ CAP
     def _true_color(self, pages: Sequence[int]) -> int:
         """Host-truth L2 color label of a virtual-color group (experiment
@@ -476,9 +624,18 @@ class FleetSim:
     def _setup_page_cache(self) -> None:
         """Colored free lists, the sensitive working set, the vanilla
         stream order, and the congruent-set poisoner that keeps the stream
-        target color's monitored sets hot."""
-        pool = self.vm.alloc_pages(
-            min(240 * max(1, self.colors.n_colors), 1024))
+        target color's monitored sets hot.
+
+        A donor-provided ``page_pool`` (`ShardedFleet` clones) replaces
+        the fresh allocation: the pool's pages are exactly the ones the
+        imported abstraction already knows the colors of, so the free
+        lists build without a single classification probe."""
+        if self._page_pool is not None:
+            pool = list(self._page_pool)
+        else:
+            pool = self.vm.alloc_pages(
+                min(240 * max(1, self.colors.n_colors), 1024))
+        self.pool_pages = list(pool)
         lists = self.colors.build_free_lists(pool)
         truths = {c: self._true_color(ps) for c, ps in lists.items() if ps}
         d0_colors = {m.color for m in self.session.monitored_sets()
@@ -679,17 +836,16 @@ class FleetSim:
         """Quiet-domain residency of the sensitive task before / during /
         after the attack+defense episode (post-warmup intervals only for
         the pre phase; the episode ends at the defense, or at the attack's
-        stop/run end when undefended)."""
-        if self.attack_spec is None or not self._resid_hist:
+        stop/run end when undefended).  Streamed: intervals classify into
+        their phase bucket as they happen
+        (`~repro.core.fleetshard.ResidencyPhases`) instead of filtering a
+        materialized history at report time."""
+        if self._resid is None:
             return (0.0, 0.0, 0.0)
-        start = self.attack_spec.start_interval
-        end = (self._defended_at if self._defended_at is not None
-               else min(self.attack_spec.stop_interval, self.n_intervals))
-        pre = [q for k, q in self._resid_hist if self.warmup <= k < start]
-        dur = [q for k, q in self._resid_hist if start <= k <= end]
-        post = [q for k, q in self._resid_hist if k > end]
-        return tuple(float(np.mean(p)) if p else 0.0
-                     for p in (pre, dur, post))
+        self._resid.finish(self._defended_at is not None,
+                           self._defended_at
+                           if self._defended_at is not None else -1)
+        return self._resid.means()
 
     def _note_recovery(self, interval: int,
                        dom_rates: Dict[int, float]) -> None:
@@ -774,11 +930,11 @@ class FleetSim:
 
         quiet_hits = scored = 0
         work_post = np.zeros(len(tasks))
-        lat_hist: List[float] = []
-        hot_hist: List[float] = []
-        quiet_hist: List[float] = []
-        l2_hot_hist: List[float] = []
-        l2_quiet_hist: List[float] = []
+        # post-warmup interval metrics stream into self.metrics (running
+        # sums, O(1) per series; keep_history=True additionally
+        # materializes the full series for timeline consumers) — the
+        # report means below are sum/n, computed online
+        metrics = self.metrics
         for k in range(self.n_intervals):
             # drift scenario: host events land mid-window; repairs run
             # before the probe so this interval measures with a (possibly
@@ -910,7 +1066,7 @@ class FleetSim:
                                 / LAT_L2 for t in tasks])
             dom_idx = jnp.array([self.vcpu_domain[t.vcpu] for t in tasks],
                                 jnp.int32)
-            prog, _ = fleet_interval_progress(
+            prog, cont = fleet_interval_progress(
                 dom_idx, rate_v, period_v, duty_on_v, sens_v, ipc_v, slow_v,
                 jnp.asarray(self._noise_per_domain()), scale,
                 n_domains=plat.n_domains, ticks=self.ticks)
@@ -918,26 +1074,36 @@ class FleetSim:
             for t_, p in zip(tasks, prog):
                 t_.done_work += float(p)
             self._note_recovery(k, dom_rates)
-            self._resid_hist.append(
-                (k, int(self.vcpu_domain[self._sens.vcpu]
-                        != POLLUTED_DOMAIN)))
+            in_quiet = int(self.vcpu_domain[self._sens.vcpu]
+                           != POLLUTED_DOMAIN)
+            if self._resid is not None:
+                self._resid.add(k, float(in_quiet),
+                                defended=self._defended_at is not None,
+                                defended_at=self._defended_at
+                                if self._defended_at is not None else -1)
             if k >= self.warmup:
                 scored += 1
                 # any unpolluted domain counts as quiet (>2-domain views)
-                quiet_hits += int(self.vcpu_domain[self._sens.vcpu]
-                                  != POLLUTED_DOMAIN)
+                quiet_hits += in_quiet
                 work_post += prog
-                lat_hist.append(lat)
-                hot_hist.append(dom_rates.get(POLLUTED_DOMAIN, 0.0))
-                quiet_hist.append(_mean([v for d, v in dom_rates.items()
-                                         if d != POLLUTED_DOMAIN]))
+                metrics.add("ws_lat", lat)
+                metrics.add("hot_rate", dom_rates.get(POLLUTED_DOMAIN, 0.0))
+                metrics.add("quiet_rate",
+                            _mean([v for d, v in dom_rates.items()
+                                   if d != POLLUTED_DOMAIN]))
                 if self.harvest_mode is not None and view.l2_cores:
                     sc = int(vm.vcpu_cores[self._sens.vcpu])
-                    l2_hot_hist.append(view.l2_cores.get(sc, 0.0))
+                    metrics.add("l2_hot_rate", view.l2_cores.get(sc, 0.0))
                     if self.harvest_tier.granted:
-                        l2_quiet_hist.append(view.l2_cores.get(
+                        metrics.add("l2_quiet_rate", view.l2_cores.get(
                             int(self.harvest_tier.granted[0]), 0.0))
+                if self.serving is not None:
+                    # serving loop outcome edge: this interval's requests
+                    # run at the ground-truth contention of whatever
+                    # domain the (measurement-fed) router picked
+                    self.serving.step(np.asarray(cont))
 
+        wall = time.perf_counter() - t0
         return FleetReport(
             platform=self.plat.name, policy=self.policy,
             cap="on" if self.cap_on else "off", seed=self.seed,
@@ -946,16 +1112,16 @@ class FleetSim:
             per_workload={t.name: float(w)
                           for t, w in zip(tasks, work_post)},
             quiet_residency=quiet_hits / max(1, scored),
-            hot_rate=float(np.mean(hot_hist)) if hot_hist else 0.0,
-            quiet_rate=float(np.mean(quiet_hist)) if quiet_hist else 0.0,
+            hot_rate=metrics.mean("hot_rate"),
+            quiet_rate=metrics.mean("quiet_rate"),
             tiers=dict(self.tt.tier),
-            ws_lat_cycles=float(np.mean(lat_hist)) if lat_hist else 0.0,
+            ws_lat_cycles=metrics.mean("ws_lat"),
             recolor_events=self.cap.stats.recolor_events,
             reclaims=self.cap.stats.reclaims,
             cap_allocated=self.cap.stats.allocated,
             dispatches=vm.stat_passes,
             accesses=vm.stat_accesses,
-            wall_s=time.perf_counter() - t0,
+            wall_s=wall,
             drift_events=self.stat_drift_events,
             repairs=self.stat_repairs,
             repair_dispatches=self.stat_repair_dispatches,
@@ -976,9 +1142,12 @@ class FleetSim:
                                  if self.harvest_tier else 0),
             harvest_promotions=(self.harvest_tier.stats.promotions
                                 if self.harvest_tier else 0),
-            l2_hot_rate=float(np.mean(l2_hot_hist)) if l2_hot_hist else 0.0,
-            l2_quiet_rate=(float(np.mean(l2_quiet_hist))
-                           if l2_quiet_hist else 0.0),
+            l2_hot_rate=metrics.mean("l2_hot_rate"),
+            l2_quiet_rate=metrics.mean("l2_quiet_rate"),
+            guests_per_sec=1.0 / max(wall, 1e-9),
+            serve_requests=self.serving.requests if self.serving else 0,
+            serve_p50_ms=self.serving.p50.value() if self.serving else 0.0,
+            serve_p99_ms=self.serving.p99.value() if self.serving else 0.0,
         )
 
 
@@ -1004,6 +1173,7 @@ def _run_lockstep(sims: List[FleetSim]) -> List[FleetReport]:
     guest's machine geometry mid-program, and a multi-guest dispatch
     needs one shared geometry.  All sims run the same drift schedule, so
     geometries re-converge by the next round and lockstep resumes."""
+    t0 = time.perf_counter()
     gens = {i: sim.steps() for i, sim in enumerate(sims)}
     reports: List[Optional[FleetReport]] = [None] * len(sims)
     pending: Dict[int, ProbePlan] = {}
@@ -1027,6 +1197,13 @@ def _run_lockstep(sims: List[FleetSim]) -> List[FleetReport]:
             except StopIteration as e:
                 reports[i] = e.value
         pending = nxt
+    # fleet-level throughput: the cohort finished together, so every
+    # guest's rate is the shared n/wall (per-guest wall_s stays the
+    # per-generator number for latency-style reporting)
+    gps = len(sims) / max(time.perf_counter() - t0, 1e-9)
+    for r in reports:
+        if r is not None:
+            r.guests_per_sec = gps
     return reports
 
 
@@ -1073,6 +1250,128 @@ def run_fleet_matrix(platforms: Optional[List[str]] = None,
         else:
             reports.extend(sim.run() for sim in sims)
     return reports
+
+
+@dataclasses.dataclass
+class FleetScaleResult:
+    """Outcome of one :class:`ShardedFleet` run (``--only scale``'s
+    headline row): how the fleet was carved (shard size / shard count /
+    device count), where the wall went (boot vs run), and the fleet
+    throughput ``guests_per_sec = n_guests / wall_s`` — the scaling-curve
+    metric BENCH.csv records per (platform, n_guests)."""
+
+    platform: str
+    n_guests: int
+    shard_size: Optional[int]
+    n_shards: int
+    n_devices: int
+    boot_s: float
+    run_s: float
+    wall_s: float
+    guests_per_sec: float
+    reports: List[FleetReport]
+
+
+class ShardedFleet:
+    """Rack-scale fleet execution: N-hundred co-running guests on one
+    platform, sublinear wall in guest count.
+
+    Three mechanisms stack (this is the ROADMAP's
+    hundreds-to-thousands-of-guests item; Com-CAS / Sprabery-style fleet
+    density for the closed loop):
+
+      * **O(1)-per-guest construction** — the first guest (the donor)
+        attaches and probes normally; every other guest boots the same
+        host seed and imports the donor's exported abstraction
+        (`CacheXSession.import_` + the donor's page pool), so colors,
+        monitored sets and free lists arrive with *zero* probing.
+        Per-guest diversity comes from ``sim_seed`` (placement wakeup
+        order, serving arrivals), not from re-probing identical hosts.
+      * **Sharded lockstep dispatch** — all guests advance through
+        :func:`_run_lockstep`, and `~repro.core.fleetshard.choose_shard`
+        threads a ``shard_size`` through every plan's lowering: each
+        probe point dispatches as ``ceil(n/S)`` reused-shape ``(S, ...)``
+        stacked kernels instead of one fresh ``(n, ...)`` compile per
+        fleet size (and instead of ``n`` per-guest dispatches), with
+        ``ScaleSpec.max_guests_per_dispatch`` capping per-dispatch
+        padding memory.  Results stay bit-identical at any shard size.
+      * **Device mapping** — `~repro.core.fleetshard.device_groups`
+        deals contiguous shard runs to local devices; each group runs
+        its lockstep cohort under ``jax.default_device``.  Single-device
+        hosts (CI) degenerate to the batched-vmap fallback: one group,
+        shards back-to-back.
+
+    Guest loop sizing defaults to the platform's
+    :class:`~repro.core.platforms.ScaleSpec` profile (fewer, shorter
+    intervals than the 4-guest paper sweeps — scale runs chart
+    throughput curves, not drift timelines); any ``FleetSim`` kwarg
+    overrides it.  Memory stays O(guests): guests default to streaming
+    metrics (``keep_history=False``) and the per-dispatch footprint is
+    bounded by the shard size, not the fleet size."""
+
+    def __init__(self, platform: Union[str, CachePlatform], n_guests: int,
+                 policy: str = "cas", cap: str = "on", seed: int = 0,
+                 serving: bool = False, serving_placement: bool = True,
+                 keep_history: bool = False,
+                 shard_size: Optional[int] = None, **kw):
+        if n_guests < 1:
+            raise ValueError("n_guests must be >= 1")
+        plat0 = get_platform(platform) if isinstance(platform, str) \
+            else platform
+        spec = plat0.scale
+        loop = dict(n_intervals=spec.n_intervals, warmup=spec.warmup,
+                    stream_len=spec.stream_len, ws_pages=spec.ws_pages)
+        loop.update(kw)
+        guest_kw = dict(policy=policy, cap=cap, seed=seed,
+                        keep_history=keep_history, serving=serving,
+                        serving_placement=serving_placement, **loop)
+        self.n_guests = int(n_guests)
+        self.shard_size = shard_size          # None = auto (choose_shard)
+        t0 = time.perf_counter()
+        donor = FleetSim(plat0, sim_seed=seed, **guest_kw)
+        if self.n_guests > 1:
+            snapshot = donor.session.export()
+            pool = donor.pool_pages
+        self.sims = [donor] + [
+            FleetSim(plat0, sim_seed=seed + i, session_import=snapshot,
+                     page_pool=pool, **guest_kw)
+            for i in range(1, self.n_guests)]
+        self.boot_s = time.perf_counter() - t0
+        self.plat = donor.plat
+
+    def run(self) -> FleetScaleResult:
+        t0 = time.perf_counter()
+        donor = self.sims[0]
+        choice = choose_shard(donor.plat, donor.session.plan(),
+                              n_guests=self.n_guests)
+        if self.shard_size is not None:       # explicit override
+            choice = dataclasses.replace(
+                choice, shard_size=self.shard_size,
+                n_shards=len(shard_slices(self.n_guests, self.shard_size)),
+                lowering=dataclasses.replace(choice.lowering,
+                                             shard_size=self.shard_size))
+        reports: List[FleetReport] = []
+        groups = device_groups(self.n_guests, choice.shard_size)
+        if not choice.lowering.lockstep or self.n_guests == 1:
+            # non-LRU lowerings cannot stack guests (same rule as
+            # run_fleet_matrix): sequential per-guest execution
+            reports = [sim.run() for sim in self.sims]
+        else:
+            for sim in self.sims:
+                sim.install_lowering(choice.lowering)
+            for dev, sl in groups:
+                with on_device(dev):
+                    reports.extend(_run_lockstep(self.sims[sl]))
+        run_s = time.perf_counter() - t0
+        wall = self.boot_s + run_s
+        gps = self.n_guests / max(wall, 1e-9)
+        for r in reports:
+            r.guests_per_sec = gps            # end-to-end fleet rate
+        return FleetScaleResult(
+            platform=self.plat.name, n_guests=self.n_guests,
+            shard_size=choice.shard_size, n_shards=choice.n_shards,
+            n_devices=len(groups), boot_s=self.boot_s, run_s=run_s,
+            wall_s=wall, guests_per_sec=gps, reports=reports)
 
 
 def _mean(vals: List[float]) -> float:

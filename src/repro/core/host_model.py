@@ -811,6 +811,56 @@ def timed_access_batch_multi(vms: Sequence["GuestVM"],
     return results
 
 
+def shard_slices(n: int, shard_size: Optional[int]) -> List[slice]:
+    """Partition ``n`` guests into contiguous shards of ``shard_size``
+    (last shard takes the remainder).  ``None``/``0``/``>= n`` means one
+    shard — the unsharded multi-guest dispatch."""
+    if not shard_size or shard_size <= 0 or shard_size >= n:
+        return [slice(0, n)]
+    return [slice(i, min(i + shard_size, n))
+            for i in range(0, n, shard_size)]
+
+
+def commit_segments_sharded(vms: Sequence["GuestVM"],
+                            segments_per_vm: Sequence[
+                                Sequence[Tuple[np.ndarray, int]]],
+                            shard_size: Optional[int] = None) -> None:
+    """Sharded committed traversal: guests split into ``shard_size`` groups,
+    one `commit_segments_multi` dispatch per shard.  ``ceil(G / S)``
+    dispatches whose stacked-state shape is ``(S, ...)`` — reused across
+    every fleet size that shards at S — instead of one ``(G, ...)`` dispatch
+    whose shape (and XLA compile) is unique to this exact G.  Per-guest
+    state evolution is identical at any shard size."""
+    vms = list(vms)
+    segments_per_vm = list(segments_per_vm)
+    for sl in shard_slices(len(vms), shard_size):
+        commit_segments_multi(vms[sl], segments_per_vm[sl])
+
+
+def timed_access_batch_sharded(vms: Sequence["GuestVM"],
+                               lanes_per_vm: Sequence[Sequence[np.ndarray]],
+                               vcpus_per_vm: Sequence[Sequence[int]],
+                               salt: int = 0,
+                               lane_bucket: Optional[int] = None,
+                               batch_bucket: Optional[int] = None,
+                               shard_size: Optional[int] = None
+                               ) -> List[List[np.ndarray]]:
+    """Sharded batched measurement: one `timed_access_batch_multi` dispatch
+    per ``shard_size`` group of guests (see :func:`commit_segments_sharded`
+    for the shape-reuse rationale).  Per-guest latencies, salts and timer
+    noise are bit-identical at any shard size — padding never leaks into
+    lane results."""
+    vms = list(vms)
+    lanes_per_vm = list(lanes_per_vm)
+    vcpus_per_vm = list(vcpus_per_vm)
+    out: List[List[np.ndarray]] = []
+    for sl in shard_slices(len(vms), shard_size):
+        out.extend(timed_access_batch_multi(
+            vms[sl], lanes_per_vm[sl], vcpus_per_vm[sl], salt=salt,
+            lane_bucket=lane_bucket, batch_bucket=batch_bucket))
+    return out
+
+
 # -- canned co-tenant generators (paper §6 workload analogues) -----------------
 
 def polluter_gen(region_pages: int = 4096, base_page: int = 1 << 18):

@@ -63,7 +63,7 @@ import numpy as np
 
 from repro.core.host_model import (_BATCH_BUCKET, _DISPATCH_STATS,
                                    _LANE_BUCKET, _STREAM_BUCKET, _ladder,
-                                   _round_up, GuestVM,
+                                   _round_up, GuestVM, shard_slices,
                                    timed_access_batch_multi)
 from repro.core.probeplan import (Commit, DEFAULT_LOWERING, Measure,
                                   PlanLowering, ProbePlan, Validate, Vote)
@@ -154,18 +154,27 @@ def plan_shapes(plan: ProbePlan, lowering: Optional[PlanLowering] = None,
     ``plan`` issues under ``lowering`` — the executor's own bucket+ladder
     padding math, without running anything.  ``n_guests > 1`` with a
     lockstep-capable lowering models `execute_many`: one multi-guest
-    dispatch per op for the whole co-running group."""
+    dispatch per op for the whole co-running group — or, when the lowering
+    carries a ``shard_size``, one per guest shard (the shard-count term:
+    ``ceil(n_guests / shard_size)`` dispatches per op, each of stacked
+    shape ``(shard, ...)``, mirroring the sharded executor exactly)."""
     hints = lowering or plan.hints or DEFAULT_LOWERING
     multi = n_guests > 1 and hints.lockstep
+    # guest-group sizes per batched op: one whole-fleet group, or the
+    # executor's shard partition (host_model.shard_slices is the single
+    # source of truth for how guests split)
+    groups = ([sl.stop - sl.start
+               for sl in shard_slices(n_guests, hints.shard_size)]
+              if multi else [n_guests])
     shapes: List[Tuple[str, Tuple[int, ...]]] = []
 
-    def measure_shape(op) -> Tuple[str, Tuple[int, ...]]:
+    def measure_shape(op, g: int) -> Tuple[str, Tuple[int, ...]]:
         b = _ladder(_round_up(len(op.lanes),
                               hints.batch_bucket or _BATCH_BUCKET))
         t = _ladder(_round_up(max((len(l) for l in op.lanes), default=1),
                               hints.lane_bucket or _LANE_BUCKET))
         if multi:
-            return ("batched_multi", (n_guests, b, t))
+            return ("batched_multi", (g, b, t))
         return ("batched", (b, t))
 
     for op in plan.ops:
@@ -175,8 +184,9 @@ def plan_shapes(plan: ProbePlan, lowering: Optional[PlanLowering] = None,
                 continue
             total = sum(len(s.gvas) for s in live)
             if multi:
-                shapes.append(("committed",
-                               (n_guests, _round_up(total, _STREAM_BUCKET))))
+                shapes.extend(("committed",
+                               (g, _round_up(total, _STREAM_BUCKET)))
+                              for g in groups)
             elif hints.fuse_commits:
                 shapes.append(("stream", (_round_up(total, _STREAM_BUCKET),)))
             else:
@@ -185,10 +195,11 @@ def plan_shapes(plan: ProbePlan, lowering: Optional[PlanLowering] = None,
                               for s in live)
         elif isinstance(op, Measure):
             if op.lanes:
-                shapes.append(measure_shape(op))
+                shapes.extend(measure_shape(op, g) for g in groups)
         elif isinstance(op, (Vote, Validate)):
             if op.lanes:
-                shapes.extend([measure_shape(op)] * op.votes)
+                shapes.extend([measure_shape(op, g) for g in groups]
+                              * op.votes)
     return shapes
 
 

@@ -129,6 +129,31 @@ class AttackSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScaleSpec:
+    """A platform's rack-scale fleet execution profile.
+
+    Consumed by `~repro.core.fleet.ShardedFleet` (and ``benchmarks
+    --only scale``): how to size the per-guest simulation loop when
+    hundreds of guests co-execute on one platform, and which shard
+    sizes the `~repro.core.fleetshard.choose_shard` cost model may
+    consider.  ``max_guests_per_dispatch`` is the honest memory
+    ceiling — the largest leading batch axis a single lockstep
+    dispatch may carry before host-side padding buffers dominate;
+    groups larger than it *must* shard.  The loop-sizing fields
+    (``n_intervals`` … ``ws_pages``) trade per-guest fidelity for
+    density: a scale run cares about fleet throughput curves, not
+    12-interval drift timelines.
+    """
+
+    shard_candidates: Tuple[int, ...] = (8, 16, 32, 64)
+    max_guests_per_dispatch: int = 64
+    n_intervals: int = 6
+    warmup: int = 2
+    stream_len: int = 64
+    ws_pages: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
 class CachePlatform:
     """One provisioned-cache scenario a cloud VM may land on.
 
@@ -195,6 +220,12 @@ class CachePlatform:
                          remaps and a live migration).  Consumed by
                          ``FleetSim(drift=True)`` and
                          ``benchmarks --only drift``.
+    ``scale``            the platform's rack-scale execution profile
+                         (:class:`ScaleSpec`): candidate shard sizes,
+                         the per-dispatch guest ceiling, and the
+                         scale-run loop sizing.  Consumed by
+                         ``ShardedFleet`` and ``benchmarks --only
+                         scale``.
     """
 
     name: str
@@ -215,6 +246,7 @@ class CachePlatform:
     lowering: Optional[PlanLowering] = None
     drift: Tuple[DriftSpec, ...] = ()
     attack: AttackSpec = AttackSpec()
+    scale: ScaleSpec = ScaleSpec()
 
     def __post_init__(self):
         if self.llc_ways_total == 0:

@@ -55,8 +55,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.host_model import (GuestVM, commit_segments_multi,
-                                   timed_access_batch_multi)
+from repro.core.host_model import (GuestVM, commit_segments_sharded,
+                                   timed_access_batch_sharded)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,12 +73,23 @@ class PlanLowering:
     ``lockstep``       whether plans of co-running guests may execute as one
                        vectorized program (:func:`execute_many`); requires
                        deterministic (LRU) replacement for bit-identity.
+    ``shard_size``     lockstep guest-shard size: ``execute_many`` splits G
+                       co-running guests into ``ceil(G / shard_size)``
+                       groups and issues one multi-guest dispatch per
+                       group per op (`host_model.commit_segments_sharded` /
+                       `timed_access_batch_sharded`).  ``None`` keeps the
+                       single whole-fleet dispatch.  Sharding bounds the
+                       stacked-state footprint of any one dispatch and
+                       reuses one ``(shard, ...)`` compile shape across
+                       fleet sizes; per-guest results are bit-identical at
+                       any shard size (`repro.core.fleetshard` picks it).
     """
 
     fuse_commits: bool = True
     lane_bucket: int = 128
     batch_bucket: int = 8
     lockstep: bool = True
+    shard_size: Optional[int] = None
 
 
 DEFAULT_LOWERING = PlanLowering()
@@ -392,7 +403,12 @@ def execute_many(vms: Sequence[GuestVM],
     Wait / WarmTimer apply per guest (each guest keeps its own window).
     Per-guest results are bit-identical to ``execute(vms[i], plans[i])``
     under deterministic (LRU) replacement — the ``PlanLowering.lockstep``
-    hint gates callers accordingly."""
+    hint gates callers accordingly.
+
+    A ``PlanLowering.shard_size`` hint shards the group: each batched op
+    issues one multi-guest dispatch per ``shard_size`` guests (the
+    rack-scale lowering — `repro.core.fleetshard`) instead of one for the
+    whole group; results stay bit-identical at any shard size."""
     if len(vms) != len(plans):
         raise ValueError("one plan per guest")
     if not plans:
@@ -405,14 +421,16 @@ def execute_many(vms: Sequence[GuestVM],
             raise ValueError(f"cannot co-execute structurally different "
                              f"plans: {sig} vs {p.signature()}")
     hints = plans[0].hints or DEFAULT_LOWERING
+    vms = list(vms)
+    shard = hints.shard_size
     outs: List[List] = [[] for _ in plans]
     for j, sig_kind in enumerate(sig):
         kind = sig_kind.split("[", 1)[0]   # strip the level suffix
         ops = [p.ops[j] for p in plans]
         if kind == "Commit":
-            commit_segments_multi(
+            commit_segments_sharded(
                 vms, [[(s.gvas, s.vcpu) for s in op.segments]
-                      for op in ops])
+                      for op in ops], shard_size=shard)
             for o in outs:
                 o.append(None)
         elif kind == "Wait":
@@ -429,10 +447,10 @@ def execute_many(vms: Sequence[GuestVM],
             if any(op.salt != ops[0].salt for op in ops):
                 raise ValueError("cannot co-execute Measures with "
                                  "different salts")
-            res = timed_access_batch_multi(
+            res = timed_access_batch_sharded(
                 vms, [op.lanes for op in ops], [op.vcpus for op in ops],
                 salt=ops[0].salt, lane_bucket=hints.lane_bucket,
-                batch_bucket=hints.batch_bucket)
+                batch_bucket=hints.batch_bucket, shard_size=shard)
             for o, r in zip(outs, res):
                 o.append(r)
         elif kind in ("Vote", "Validate"):
@@ -443,11 +461,11 @@ def execute_many(vms: Sequence[GuestVM],
                                  "threshold/votes")
             hits = [np.zeros(len(op.lanes), np.int64) for op in ops]
             for vote in range(op0.votes):
-                res = timed_access_batch_multi(
+                res = timed_access_batch_sharded(
                     vms, [op.lanes for op in ops],
                     [op.vcpus for op in ops], salt=vote,
                     lane_bucket=hints.lane_bucket,
-                    batch_bucket=hints.batch_bucket)
+                    batch_bucket=hints.batch_bucket, shard_size=shard)
                 for h, lats, op in zip(hits, res, ops):
                     h += np.array([int(l[-1] > op.threshold)
                                    for l in lats], np.int64)

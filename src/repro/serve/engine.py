@@ -53,6 +53,14 @@ class ReplicaRouter:
         self.tiers = tiers or TierTracker(keys=list(range(n_replicas)))
         self.load = np.zeros(n_replicas, int)
 
+    def on_contention(self, view) -> None:
+        """`CacheXSession.subscribe` target: feed a published
+        :class:`~repro.core.abstraction.ContentionView`'s measured
+        per-domain rates into the router's tier tracker, so ``route()``
+        prefers replicas in measured-quiet domains (replica index ==
+        LLC domain, the fleet's `ServingGuest` convention)."""
+        self.tiers.on_contention(view)
+
     def route(self) -> int:
         t = self.tiers.tier
         order = sorted(range(self.n), key=lambda r: (t.get(r, 0),

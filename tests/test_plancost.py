@@ -12,6 +12,11 @@ Covers:
     replacement), which is what makes it a pure cost knob;
   * compile prediction: a shape is a miss once, across the shape cache and
     the plan's own dispatch walk; executed dispatches feed the prediction;
+  * sharded lockstep dispatch (the rack-scale shard-count term): with a
+    ``shard_size`` on the lowering, ``execute_many`` issues one dispatch
+    per guest shard per batched op and ``plan_cost(..., n_guests=N)``
+    predicts exactly that physical count — per platform — while results
+    stay bit-identical to the unsharded path;
   * the measured autotuner: deterministic chosen lowering + trial cutouts
     under a fixed seed across repeated forced tunes; cached reuse (a
     second session attach re-times nothing); milan_ccx's ``lane_bucket=64``
@@ -181,6 +186,59 @@ def test_shape_cache_fed_by_execution():
     after = plan_cost(plan, platform=plat)
     assert after.compile_misses == 0
     assert after.compile_hits == after.dispatches
+
+
+# ---------------------------------------------------------------------------
+# sharded lockstep dispatch: shard-count term == physical counter delta
+# ---------------------------------------------------------------------------
+
+def _assert_same_values(a, b):
+    if a is None:
+        assert b is None
+    elif isinstance(a, (tuple, list)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_same_values(x, y)
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ["skylake_sp", "milan_ccx"])
+def test_sharded_dispatch_accounting_matches_execution(name):
+    # 5 co-running guests at shard_size=2 split [2, 2, 1] (shard_slices is
+    # the single source of truth): every batched op dispatches once per
+    # shard, so the 4 dispatch-bearing shapes of _small_plan (fused Commit
+    # + Measure + 2 Vote rounds) cost 3x4 = 12 dispatches — and plan_cost's
+    # shard-count term must equal the physical counter delta of actually
+    # running execute_many under that lowering
+    plat = get_platform(name)
+    vms = [_small_vm(plat, seed=3 + i) for i in range(5)]
+    hints = dataclasses.replace(plat.plan_lowering(), shard_size=2)
+    assert hints.lockstep
+    plans = [_small_plan(vm, hints) for vm in vms]
+    d0 = probe_dispatch_count()
+    probeplan.execute_many(vms, plans)
+    measured = probe_dispatch_count() - d0
+    cost = plan_cost(plans[0], hints, platform=plat, n_guests=5)
+    assert cost.dispatches == measured == 12
+    # one unsharded lockstep dispatch per op, three shards => exactly 3x
+    whole = plan_cost(plans[0], dataclasses.replace(hints, shard_size=None),
+                      platform=plat, n_guests=5)
+    assert cost.dispatches == 3 * whole.dispatches
+
+
+def test_sharded_execution_results_bit_identical():
+    # shard_size is a pure dispatch-shape knob: per-guest PlanResults are
+    # bit-identical between the unsharded and sharded lockstep paths
+    plat = get_platform(FAST_PLATFORM)
+    runs = []
+    for shard in (None, 2):
+        vms = [_small_vm(plat, seed=3 + i) for i in range(5)]
+        hints = dataclasses.replace(plat.plan_lowering(), shard_size=shard)
+        plans = [_small_plan(vm, hints) for vm in vms]
+        runs.append(probeplan.execute_many(vms, plans))
+    for ra, rb in zip(*runs):
+        _assert_same_values(ra.values, rb.values)
 
 
 # ---------------------------------------------------------------------------

@@ -304,7 +304,7 @@ def test_fleet_lockstep_parity_and_dispatch_reduction():
     lock = _run_lockstep(lock_sims)
     lock_loop = probe_dispatch_count() - d0
 
-    skip = ("dispatches", "wall_s")
+    skip = ("dispatches", "wall_s", "guests_per_sec")
     for l, s, k in zip(legacy, seq, lock):
         for f in dataclasses.fields(type(l)):
             if f.name in skip:
